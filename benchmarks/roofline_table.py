@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md §Roofline table from dry-run JSON artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [dir] [--md]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load_cells(d: str):
+    cells = []
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(d, name)) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c, md=False):
+    sep = " | " if md else "  "
+    ms = lambda s: f"{s*1e3:9.2f}"
+    return sep.join([
+        f"{c['arch']:<24s}", f"{c['shape']:<12s}",
+        ms(c["compute_s"]), ms(c["memory_s"]), ms(c["collective_s"]),
+        f"{c['dominant']:<10s}",
+        f"{c['model_flops']*c['chips']:.2e}",
+        f"{c['useful_flop_ratio']:6.3f}",
+        f"{c['roofline_fraction']:6.3f}",
+        f"{c.get('bound_fraction', 0.0):6.3f}",
+    ])
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_single"
+    md = "--md" in sys.argv
+    cells = [c for c in load_cells(d) if c.get("status") == "ok"]
+    cells.sort(key=lambda c: (c["arch"], c["shape"]))
+    hdr = ["arch", "shape", "compute_ms", "memory_ms", "coll_ms",
+           "dominant", "MODEL_FLOPS", "useful", "frac", "bound"]
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for c in cells:
+            print("| " + fmt_row(c, md=True) + " |")
+    else:
+        print("  ".join(hdr))
+        for c in cells:
+            print(fmt_row(c))
+    # hillclimb candidates
+    by_frac = sorted(cells, key=lambda c: c["roofline_fraction"])
+    coll = sorted(cells, key=lambda c: -c["collective_s"] /
+                  max(1e-12, c["compute_s"] + c["memory_s"] + c["collective_s"]))
+    print(f"\nworst fraction: {by_frac[0]['arch']}/{by_frac[0]['shape']} "
+          f"({by_frac[0]['roofline_fraction']:.4f})", file=sys.stderr)
+    print(f"most collective-bound: {coll[0]['arch']}/{coll[0]['shape']} "
+          f"(coll share {coll[0]['collective_s']/max(1e-12, coll[0]['compute_s']+coll[0]['memory_s']+coll[0]['collective_s']):.3f})",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Benchmark harness — one function per paper table/figure, plus
+framework benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+  * fig4..fig10   — PILS use cases 1–7 (§5.1): derived = the use case's
+                    headline metric, asserted against the paper's value.
+  * table1..3     — SOD2D / FALL3D / XSHELLS node scans (§5.2): derived =
+                    key metric at 8 nodes; the full node-scan table is
+                    printed to stderr for inspection.
+  * talp_overhead — the "lightweight monitoring" claim: cost of a
+                    region enter/exit + state scope per step.
+  * flatten_throughput — interval post-processing throughput (records/s).
+  * kernel_*      — Pallas kernels (interpret mode) vs jnp oracle.
+  * roofline_cells — summary over the dry-run JSONs (if present).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _bench(fn, n_iter: int = 5, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    return (time.perf_counter() - t0) / n_iter * 1e6  # us
+
+
+def _row(name: str, us: float, derived):
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+# ---------------------------------------------------------------------------
+# Figs 4–10: PILS use cases
+# ---------------------------------------------------------------------------
+def bench_pils():
+    from repro.pils import run_use_case
+
+    heads = {
+        "uc1": ("fig4_uc1", lambda a: a["trace"].device.orchestration_efficiency),
+        "uc2": ("fig5_uc2", lambda a: a["trace"].host.device_offload_efficiency),
+        "uc3": ("fig6_uc3", lambda a: a["trace"].device.load_balance),
+        "uc4": ("fig7_uc4", lambda a: a["trace"].host.load_balance),
+        "uc5": ("fig8_uc5", lambda a: a["trace"].device.orchestration_efficiency),
+        "uc6": ("fig9_uc6", lambda a: a["trace"].device.communication_efficiency),
+        "uc7": ("fig10_uc7", lambda a: a["overlap"].host.device_offload_efficiency
+                - a["no_overlap"].host.device_offload_efficiency),
+    }
+    for uc, (name, metric) in heads.items():
+        res = {}
+
+        def run(uc=uc, res=res):
+            res["r"] = run_use_case(uc)
+
+        us = _bench(run)
+        val = metric(res["r"].analyses)
+        _row(name, us, f"{val:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Tables 1–3: application node scans
+# ---------------------------------------------------------------------------
+def bench_app_tables():
+    from repro.appsim import node_scan
+    from repro.core.report import node_scan_table
+
+    for i, app in enumerate(("sod2d", "fall3d", "xshells"), start=1):
+        res = {}
+
+        def run(app=app, res=res):
+            res["scan"] = node_scan(app)
+
+        us = _bench(run, n_iter=3)
+        scan = res["scan"]
+        table = node_scan_table(
+            [scan[n] for n in (1, 2, 4, 8)], ["1", "2", "4", "8"],
+            title=f"TALP Output for {app.upper()} from 1 to 8 nodes",
+        )
+        print(table, file=sys.stderr)
+        derived = scan[8].device.orchestration_efficiency
+        _row(f"table{i}_{app}", us, f"orch@8={derived:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# TALP overhead (the "lightweight" claim)
+# ---------------------------------------------------------------------------
+def bench_talp_overhead():
+    from repro.core.talp import TalpMonitor
+
+    mon = TalpMonitor("bench")
+    n = 10000
+
+    def run():
+        for _ in range(n):
+            mon.open_region("step")
+            with mon.offload():
+                pass
+            mon.close_region("step")
+
+    us = _bench(run, n_iter=3) / n
+    _row("talp_region_overhead", us, f"{us:.3f}us/step")
+
+    def run_sample():
+        mon.sample("step")
+
+    us2 = _bench(run_sample, n_iter=20)
+    _row("talp_online_sample", us2, "per-call")
+
+
+def bench_flatten_throughput():
+    from repro.core import intervals as iv
+
+    rng = np.random.default_rng(0)
+    n = 200_000
+    starts = rng.uniform(0, 1000, n)
+    recs = np.stack([starts, starts + rng.uniform(0, 0.02, n)], axis=1)
+
+    def run():
+        iv.flatten(recs)
+
+    us = _bench(run, n_iter=5)
+    _row("flatten_200k_records", us, f"{n / (us / 1e6) / 1e6:.1f}M rec/s")
+
+    kern = iv.flatten(recs[: n // 2])
+    mem = recs[n // 2:]
+
+    def run_sub():
+        iv.subtract(mem, kern)
+
+    us2 = _bench(run_sub, n_iter=3)
+    _row("subtract_100k_records", us2, "memory-overlap removal")
+
+
+# ---------------------------------------------------------------------------
+# kernels (interpret mode — correctness-path cost, not TPU perf)
+# ---------------------------------------------------------------------------
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.kernel import flash_attention
+    from repro.kernels.flash_attention.ref import attention_reference
+    from repro.kernels.ssd.kernel import ssd_pallas
+    from repro.kernels.ssd.ref import ssd_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+
+    out_k = flash_attention(q, k, v, interpret=True)
+    out_r = attention_reference(q, k, v)
+    err = float(jnp.abs(out_k - out_r).max())
+    us = _bench(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, interpret=True)), n_iter=3)
+    _row("kernel_flash_attn_interpret", us, f"maxerr={err:.2e}")
+    us_ref = _bench(lambda: jax.block_until_ready(
+        jax.jit(attention_reference)(q, k, v)), n_iter=3)
+    _row("kernel_flash_attn_ref_xla", us_ref, "oracle")
+
+    x = jax.random.normal(ks[0], (1, 256, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 256, 4)))
+    a = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    bm = jax.random.normal(ks[3], (1, 256, 1, 32))
+    cm = jax.random.normal(ks[4], (1, 256, 1, 32))
+    out_k = ssd_pallas(x, dt, a, bm, cm, chunk=64, interpret=True)
+    out_r = ssd_reference(x, dt, a, bm, cm, chunk=64)
+    err = float(jnp.abs(out_k - out_r).max())
+    us = _bench(lambda: jax.block_until_ready(
+        ssd_pallas(x, dt, a, bm, cm, chunk=64, interpret=True)), n_iter=3)
+    _row("kernel_ssd_interpret", us, f"maxerr={err:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# roofline summary over dry-run artifacts
+# ---------------------------------------------------------------------------
+def bench_roofline_cells():
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    d = os.path.join(base, "dryrun_single_opt")      # optimized sweep
+    if not os.path.isdir(d):
+        d = os.path.join(base, "dryrun_single")      # baseline fallback
+    if not os.path.isdir(d):
+        _row("roofline_cells", 0.0, "no dry-run artifacts (run dryrun --all)")
+        return
+    fracs = []
+    t0 = time.perf_counter()
+    for name in sorted(os.listdir(d)):
+        with open(os.path.join(d, name)) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        fracs.append((cell["roofline_fraction"], cell["arch"], cell["shape"],
+                      cell["dominant"]))
+    us = (time.perf_counter() - t0) * 1e6
+    if not fracs:
+        _row("roofline_cells", us, "none")
+        return
+    fracs.sort()
+    worst = fracs[0]
+    best = fracs[-1]
+    med = fracs[len(fracs) // 2]
+    _row("roofline_cells", us,
+         f"n={len(fracs)} worst={worst[0]:.3f}({worst[1]}/{worst[2]}) "
+         f"median={med[0]:.3f} best={best[0]:.3f}({best[1]}/{best[2]})")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_pils()
+    bench_app_tables()
+    bench_talp_overhead()
+    bench_flatten_throughput()
+    bench_kernels()
+    bench_roofline_cells()
+
+
+if __name__ == "__main__":
+    main()

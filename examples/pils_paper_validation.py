@@ -1,0 +1,19 @@
+"""Reproduce the paper's seven PILS use cases (Figs. 4-10) and print the
+TALP report for each — the values match the paper (see
+tests/test_pils_usecases.py for the assertions).
+
+Run:  PYTHONPATH=src python examples/pils_paper_validation.py
+"""
+
+from repro.core.report import render_text
+from repro.pils import USE_CASES, run_use_case
+
+for name in sorted(USE_CASES):
+    res = run_use_case(name)
+    print("#" * 72)
+    print(f"# {name}: {res.description}")
+    print("#" * 72)
+    for variant, analysis in res.analyses.items():
+        title = f"{name} ({variant})" if len(res.analyses) > 1 else name
+        print(render_text(analysis, title=title))
+        print()

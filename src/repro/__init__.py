@@ -1,0 +1,2 @@
+"""TALP-JAX: the paper's efficiency-metric framework (repro.core) inside
+a multi-pod JAX training/serving stack. See README.md / DESIGN.md."""

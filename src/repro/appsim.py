@@ -1,0 +1,110 @@
+"""Workload emulators for the paper's three production applications
+(§5.2): mechanistic models of each code's documented behavior, emitting
+standard ``Trace`` objects the TALP pipeline analyzes — reproducing the
+structure of Tables 1–3 across a 1→8 node scan (4 GPUs + 4 ranks per
+node, as on MareNostrum5-ACC).
+
+The models are *forward* simulations (work decomposition + scaling laws),
+not curve fits per cell: constants are set so the 1-node column matches
+the paper closely, and the node-scan trends (which metric degrades and
+why) emerge from the model:
+
+  * SOD2D  — GPU-resident SEM solver: all compute offloaded (DOE ~0.06),
+    kernels strong-scale 1/n, host MPI share grows with n → host Comm.
+    Eff. and device Orchestration Eff. degrade together.
+  * FALL3D — init-dominated ADS model: rank 0 distributes the workload
+    while others wait (host LB ∝ 1/n), GPU work is a small fraction →
+    Orchestration Eff. collapses with n while Offload Eff. *rises*.
+  * XSHELLS — balanced spectral code: a non-scaling MPI-heavy init phase
+    (I ∝ n^0.75) erodes host Comm. Eff. and device Orchestration as the
+    iterative phase shrinks.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .core.analysis import TraceAnalysis, analyze_trace
+from .core.backends import SyntheticTraceBuilder
+from .core.states import Trace
+
+__all__ = ["sod2d_trace", "fall3d_trace", "xshells_trace", "node_scan"]
+
+RANKS_PER_NODE = 4  # MN5-ACC: 4 H100 + 4 ranks per node
+
+
+def sod2d_trace(nodes: int, steps: int = 3) -> Trace:
+    """GPU-dominant spectral-element CFD (Table 1)."""
+    r = RANKS_PER_NODE * nodes
+    g = 4.0 / r                    # per-device kernel time (strong scaling)
+    mem = 0.01 * g                 # small D2H/H2D traffic (device CE ~0.99)
+    w = g + mem                    # host blocked during offload
+    u = w * 6.0 / 94.0             # DOE ≈ 0.06: host only orchestrates
+    # host MPI share grows with scale: (1-CE)/CE = 0.0526 · n^1.05
+    mpi = (u + w) * 0.0526 * nodes ** 1.05
+    b = SyntheticTraceBuilder(nranks=r, ndevices=r, name=f"sod2d_n{nodes}")
+    for _ in range(steps):
+        for i in range(r):
+            c = b.rank(i)
+            c.useful(u)
+            c.offload_kernel(g * (1.0 - 0.005 * (i % 4)))   # ~1% device LB
+            c.offload_memory(mem)
+            c.mpi(mpi)
+        b.barrier()
+    return b.build()
+
+
+def fall3d_trace(nodes: int, steps: int = 3) -> Trace:
+    """Init-dominated atmospheric transport (Table 2)."""
+    r = RANKS_PER_NODE * nodes
+    g1 = 1.0                       # kernel unit at 1 node
+    g = 4.0 * g1 / r               # per-device kernel, strong scaling
+    tr = 0.28 * g                  # transfers → device CE ≈ 0.78
+    u = 0.783 * 4.0 * g1 / r       # per-rank host compute, strong scaling
+    d_init = 3.67 * g1 * steps     # rank-0 workload distribution (serial,
+    #                                scales with problem size = steps here)
+    mpi_it = 1.01 * g1 * 0.33      # iterative MPI per step (weakly scaling)
+    b = SyntheticTraceBuilder(nranks=r, ndevices=r, name=f"fall3d_n{nodes}")
+    # --- init: rank 0 distributes, everyone else waits in MPI ---
+    b.rank(0).useful(d_init)
+    b.barrier()
+    # --- iterative phase ---
+    for _ in range(steps):
+        for i in range(r):
+            c = b.rank(i)
+            c.useful(u * (1.0 + 0.01 * (i % 4)))
+            c.offload_kernel(g * (1.0 - 0.01 * (i % 4)))    # device LB ~0.98
+            c.offload_memory(tr)
+            c.mpi(mpi_it)
+        b.barrier()
+    return b.build()
+
+
+def xshells_trace(nodes: int, steps: int = 3) -> Trace:
+    """Balanced rotating-Navier-Stokes spectral code (Table 3)."""
+    r = RANKS_PER_NODE * nodes
+    g = 4.0 / r                    # kernel, strong scaling
+    mem = 0.02 * g                 # device CE ~0.98
+    w = g + mem
+    # CPU work scales sublinearly (n^-0.7) → Offload Eff. rises with n,
+    # matching the paper's "work done by CPUs increases as we scale"
+    u = (2.0 / 3.0) * (w * r / 4.0) * (1.0 / nodes) ** 0.7
+    # non-scaling MPI-heavy init: absolute time grows ~n^0.6
+    i_mpi = 0.17 * nodes ** 0.6
+    b = SyntheticTraceBuilder(nranks=r, ndevices=r, name=f"xshells_n{nodes}")
+    for _ in range(steps):
+        for i in range(r):
+            c = b.rank(i)
+            c.mpi(i_mpi / steps)                     # non-scaling init share
+            c.useful(u * (1.0 + 0.005 * (i % 4)))    # host LB ~0.98
+            c.offload_kernel(g)
+            c.offload_memory(mem)
+        b.barrier()
+    return b.build()
+
+
+def node_scan(app: str, nodes: List[int] = (1, 2, 4, 8),
+              steps: int = 3) -> Dict[int, TraceAnalysis]:
+    fn = {"sod2d": sod2d_trace, "fall3d": fall3d_trace,
+          "xshells": xshells_trace}[app]
+    return {n: analyze_trace(fn(n, steps=steps)) for n in nodes}

@@ -1,0 +1,152 @@
+"""Checkpoint serialization: pytree ↔ directory of array files + manifest.
+
+Layout (one checkpoint):
+    <dir>/step_<N>/
+        manifest.json       # tree structure, shapes, dtypes, step
+        <leaf-key>.npy      # one file per leaf
+
+Writes are crash-safe: everything lands in ``step_<N>.tmp`` and is
+atomically renamed once the manifest is fsynced — a half-written
+checkpoint is never visible to ``latest_step``. Restore accepts target
+shardings, so a checkpoint written on one mesh can be loaded onto a
+different mesh/device-count (elastic rescaling): arrays are stored
+unsharded per leaf and re-placed with ``jax.device_put``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "list_steps"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+# ml_dtypes types don't survive np.save/np.load on their own: store them
+# as same-width uint views and record the true dtype in the manifest.
+_EXOTIC_STORE = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC_STORE:
+        return arr.view(_EXOTIC_STORE[name]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC_STORE:
+        return arr.view(getattr(ml_dtypes, dtype_name))
+    return arr
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "root"
+
+
+def save_checkpoint(directory: str, step: int, state: Any) -> str:
+    """Write a checkpoint; returns the final path."""
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    entries: List[Dict[str, Any]] = []
+    for path, leaf in leaves:
+        key = _leaf_key(path)
+        arr = np.asarray(jax.device_get(leaf))
+        storable, dtype_name = _to_storable(arr)
+        np.save(os.path.join(tmp, key + ".npy"), storable)
+        entries.append({
+            "key": key,
+            "shape": list(arr.shape),
+            "dtype": dtype_name,
+        })
+    manifest = {"step": step, "leaves": entries}
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def list_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    target: Any,
+    shardings: Any = None,
+) -> Any:
+    """Load ``step`` into the structure of ``target`` (a pytree of arrays
+    or ShapeDtypeStructs). With ``shardings`` (a matching pytree of
+    ``jax.sharding.Sharding``), leaves are placed sharded — this is the
+    elastic-reshard path."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    available = {e["key"]: e for e in manifest["leaves"]}
+
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None
+        else [None] * len(leaves_with_path)
+    )
+    if shardings is not None and len(shard_leaves) != len(leaves_with_path):
+        raise ValueError("shardings tree does not match target tree")
+
+    out = []
+    for (p, leaf), sh in zip(leaves_with_path, shard_leaves):
+        key = _leaf_key(p)
+        if key not in available:
+            raise KeyError(f"checkpoint {path} missing leaf {key}")
+        arr = np.load(os.path.join(path, key + ".npy"))
+        arr = _from_storable(arr, available[key]["dtype"])
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != target {want_shape}"
+            )
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,56 @@
+"""repro.core — TALP efficiency metrics for accelerated systems (the paper).
+
+Public API:
+  * interval algebra: :mod:`repro.core.intervals`
+  * state model: :mod:`repro.core.states`
+  * metrics: :func:`pop_metrics`, :func:`host_metrics`, :func:`device_metrics`
+  * hierarchy: :mod:`repro.core.tree`
+  * monitor: :class:`TalpMonitor`
+  * analysis/report: :func:`analyze_trace`, :mod:`repro.core.report`
+  * backends: synthetic / runtime / analytical plugins
+"""
+
+from . import intervals
+from .analysis import TraceAnalysis, analyze_trace
+from .device_metrics import DeviceMetrics, device_metrics
+from .host_metrics import HostMetrics, host_metrics
+from .pop import PopMetrics, elapsed_time, pop_metrics
+from .states import (
+    DeviceActivity,
+    DeviceOccupancy,
+    DeviceRecord,
+    DeviceState,
+    DeviceTimeline,
+    HostState,
+    HostTimeline,
+    Trace,
+)
+from .talp import RegionResult, TalpMonitor, TalpResult
+from .tree import MetricNode, device_tree, host_tree
+
+__all__ = [
+    "intervals",
+    "TraceAnalysis",
+    "analyze_trace",
+    "DeviceMetrics",
+    "device_metrics",
+    "HostMetrics",
+    "host_metrics",
+    "PopMetrics",
+    "elapsed_time",
+    "pop_metrics",
+    "DeviceActivity",
+    "DeviceOccupancy",
+    "DeviceRecord",
+    "DeviceState",
+    "DeviceTimeline",
+    "HostState",
+    "HostTimeline",
+    "Trace",
+    "RegionResult",
+    "TalpMonitor",
+    "TalpResult",
+    "MetricNode",
+    "device_tree",
+    "host_tree",
+]

@@ -1,0 +1,60 @@
+"""Activity-backend plugin protocol (≙ the paper's CUPTI / rocprofiler plugins).
+
+Each backend implements two complementary paths, mirroring §4.2:
+
+  (i)  synchronous monitoring of host API calls — in TALP-JAX this is
+       the monitor's ``offload()`` / ``instrument()`` scopes, which the
+       backend may hook;
+  (ii) asynchronous collection of device activity records, delivered in
+       batches via ``flush()`` and post-processed uniformly by the core
+       (flatten kernels → subtract overlap from memory → classify idle).
+
+Backends register by name so a deployment enables whichever matches the
+runtime environment (the paper: CUPTI plugin if CUDA, rocprofiler if HIP,
+OpenACC hooks if the OpenACC runtime is detected).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Protocol, Tuple, runtime_checkable
+
+from ..states import DeviceRecord
+
+__all__ = ["ActivityBackend", "register_backend", "get_backend", "available_backends"]
+
+
+@runtime_checkable
+class ActivityBackend(Protocol):
+    """Protocol every plugin implements."""
+
+    def start(self) -> None:
+        """Enable collection (≙ cuptiActivityEnable / rocprofiler filters)."""
+        ...
+
+    def stop(self) -> None:
+        """Disable collection and release resources."""
+        ...
+
+    def flush(self) -> Iterable[Tuple[int, DeviceRecord]]:
+        """Drain buffered (device, record) pairs (≙ activity-buffer flush)."""
+        ...
+
+
+_REGISTRY: Dict[str, Callable[..., ActivityBackend]] = {}
+
+
+def register_backend(name: str):
+    def deco(factory: Callable[..., ActivityBackend]):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get_backend(name: str, **kwargs) -> ActivityBackend:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)

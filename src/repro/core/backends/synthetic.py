@@ -1,0 +1,155 @@
+"""Synthetic trace construction — the PILS substrate.
+
+PILS (paper §5.1) is a microbenchmark that *constructs controlled
+execution patterns* (imbalance, offload, transfers, overlap) to validate
+the metrics. This builder is the pattern-construction engine: cursors
+advance per rank and per device, states are appended sequentially, and
+``barrier()`` models an MPI blocking synchronization (laggard ranks wait
+in MPI until the slowest arrives) — exactly how the paper's traces are
+shaped (red MPI regions while waiting for rank 0, etc.).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from ..states import DeviceActivity, DeviceRecord, HostState, Trace
+from .base import register_backend
+
+__all__ = ["SyntheticTraceBuilder", "SyntheticBackend"]
+
+
+@dataclass
+class _RankCursor:
+    builder: "SyntheticTraceBuilder"
+    rank: int
+    t: float = 0.0
+
+    def _host(self, state: HostState, dur: float) -> "_RankCursor":
+        if dur < 0:
+            raise ValueError("negative duration")
+        self.builder.trace.host(self.rank).add(state, dur)
+        self.t += dur
+        return self
+
+    def useful(self, dur: float) -> "_RankCursor":
+        return self._host(HostState.USEFUL, dur)
+
+    def mpi(self, dur: float) -> "_RankCursor":
+        return self._host(HostState.MPI, dur)
+
+    def offload(self, dur: float) -> "_RankCursor":
+        """Host blocked in device runtime calls for `dur` seconds."""
+        return self._host(HostState.OFFLOAD, dur)
+
+    # -- combined host+device idioms used by PILS patterns -------------
+    def offload_kernel(self, dur: float, device: Optional[int] = None,
+                       stream: int = 0) -> "_RankCursor":
+        """Synchronous offload: host blocked while its GPU runs a kernel."""
+        dev = self.rank if device is None else device
+        self.builder.trace.device(dev).add(
+            DeviceActivity.KERNEL, self.t, self.t + dur, stream=stream
+        )
+        return self._host(HostState.OFFLOAD, dur)
+
+    def offload_memory(self, dur: float, device: Optional[int] = None,
+                       stream: int = 0) -> "_RankCursor":
+        """Synchronous transfer: host blocked while data moves."""
+        dev = self.rank if device is None else device
+        self.builder.trace.device(dev).add(
+            DeviceActivity.MEMORY, self.t, self.t + dur, stream=stream
+        )
+        return self._host(HostState.OFFLOAD, dur)
+
+    def async_kernel(self, dur: float, device: Optional[int] = None,
+                     launch: float = 0.0, stream: int = 0) -> "_RankCursor":
+        """Asynchronous launch: kernel starts now; host continues (use
+        case 7's overlapped execution). ``launch`` charges a small host
+        offload cost for the launch call itself."""
+        dev = self.rank if device is None else device
+        self.builder.trace.device(dev).add(
+            DeviceActivity.KERNEL, self.t + launch, self.t + launch + dur,
+            stream=stream,
+        )
+        if launch > 0:
+            self._host(HostState.OFFLOAD, launch)
+        return self
+
+
+@dataclass
+class SyntheticTraceBuilder:
+    nranks: int = 2
+    ndevices: Optional[int] = None
+    name: str = "synthetic"
+    trace: Trace = field(init=False)
+    _cursors: Dict[int, _RankCursor] = field(init=False, default_factory=dict)
+
+    def __post_init__(self):
+        self.trace = Trace(name=self.name)
+        if self.ndevices is None:
+            self.ndevices = self.nranks
+        for r in range(self.nranks):
+            self.trace.host(r)
+        for d in range(self.ndevices):
+            self.trace.device(d)
+
+    def rank(self, r: int) -> _RankCursor:
+        if r not in self._cursors:
+            self._cursors[r] = _RankCursor(self, r)
+        return self._cursors[r]
+
+    def barrier(self) -> "SyntheticTraceBuilder":
+        """MPI blocking synchronization: every rank waits (MPI state)
+        until the slowest cursor arrives."""
+        tmax = max((c.t for c in self._cursors.values()), default=0.0)
+        for r in range(self.nranks):
+            c = self.rank(r)
+            if c.t < tmax:
+                c.mpi(tmax - c.t)
+        return self
+
+    def device_kernel(self, dev: int, start: float, dur: float,
+                      stream: int = 0) -> "SyntheticTraceBuilder":
+        self.trace.device(dev).add(DeviceActivity.KERNEL, start, start + dur,
+                                   stream=stream)
+        return self
+
+    def device_memory(self, dev: int, start: float, dur: float,
+                      stream: int = 0) -> "SyntheticTraceBuilder":
+        self.trace.device(dev).add(DeviceActivity.MEMORY, start, start + dur,
+                                   stream=stream)
+        return self
+
+    def build(self, window: Optional[Tuple[float, float]] = None) -> Trace:
+        if window is None:
+            t_host = max((c.t for c in self._cursors.values()), default=0.0)
+            t_dev = max(
+                (r.end for tl in self.trace.devices.values() for r in tl.records),
+                default=0.0,
+            )
+            window = (0.0, max(t_host, t_dev))
+        self.trace.window = window
+        return self.trace
+
+
+@register_backend("synthetic")
+class SyntheticBackend:
+    """ActivityBackend that replays a pre-built record list (testing)."""
+
+    def __init__(self, records: Optional[Iterable[Tuple[int, DeviceRecord]]] = None):
+        self._records: List[Tuple[int, DeviceRecord]] = list(records or [])
+        self.started = False
+
+    def start(self) -> None:
+        self.started = True
+
+    def stop(self) -> None:
+        self.started = False
+
+    def push(self, dev: int, record: DeviceRecord) -> None:
+        self._records.append((dev, record))
+
+    def flush(self):
+        out, self._records = self._records, []
+        return out

@@ -1,0 +1,93 @@
+"""Device-side efficiency hierarchy (paper §4.1, Fig. 3, eqs. 9–12).
+
+Three device states per accelerator (streams flattened): Kernel (K),
+Memory operations (M), Idle. The Parallel Efficiency branch:
+
+  Device Parallel Efficiency  PE = ΣK / (E·m)                      (eq. 9)
+  Load Balance                LB = ΣK / (m · max K)                (eq. 10)
+  Communication Efficiency    CE = max K / max(K+M)                (eq. 11)
+  Orchestration Efficiency    OE = max(K+M) / E                    (eq. 12)
+
+with PE = LB × CE × OE (multiplicative). The second branch, Device
+Computational Efficiency, is the paper's *future work*; we implement it
+as a beyond-paper extension in :mod:`repro.core.backends.analytical`
+(useful-model-FLOPs vs peak over kernel time).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["DeviceMetrics", "device_metrics"]
+
+
+@dataclass(frozen=True)
+class DeviceMetrics:
+    parallel_efficiency: float        # eq. (9)
+    load_balance: float               # eq. (10)
+    communication_efficiency: float   # eq. (11)
+    orchestration_efficiency: float   # eq. (12)
+    elapsed: float
+    n_devices: int
+    # beyond-paper (paper's future-work branch), optional:
+    computational_efficiency: Optional[float] = None
+
+    def validate(self, tol: float = 1e-9) -> None:
+        prod = (
+            self.load_balance
+            * self.communication_efficiency
+            * self.orchestration_efficiency
+        )
+        if abs(prod - self.parallel_efficiency) > tol:
+            raise AssertionError(
+                f"PE_device {self.parallel_efficiency} != LB*CE*OE {prod}"
+            )
+
+    def as_dict(self) -> Dict[str, float]:
+        d = {
+            "parallel_efficiency": self.parallel_efficiency,
+            "load_balance": self.load_balance,
+            "communication_efficiency": self.communication_efficiency,
+            "orchestration_efficiency": self.orchestration_efficiency,
+            "elapsed": self.elapsed,
+            "n_devices": self.n_devices,
+        }
+        if self.computational_efficiency is not None:
+            d["computational_efficiency"] = self.computational_efficiency
+        return d
+
+
+def device_metrics(
+    kernel: Sequence[float],
+    memory: Sequence[float],
+    elapsed: float,
+    computational_efficiency: Optional[float] = None,
+) -> DeviceMetrics:
+    """Compute eqs. (9)–(12) from per-device flattened state durations."""
+    k = np.asarray(kernel, dtype=np.float64)
+    mem = np.asarray(memory, dtype=np.float64)
+    if k.shape != mem.shape or k.ndim != 1 or len(k) == 0:
+        raise ValueError("kernel/memory must be equal-length 1-D, non-empty")
+    if np.any(k < 0) or np.any(mem < 0):
+        raise ValueError("negative state duration")
+    if elapsed <= 0:
+        raise ValueError("elapsed must be positive")
+    m = len(k)
+    max_k = float(np.max(k))
+    max_km = float(np.max(k + mem))
+    pe = float(np.sum(k)) / (elapsed * m)                     # eq. (9)
+    lb = float(np.sum(k)) / (m * max_k) if max_k > 0 else 0.0  # eq. (10)
+    ce = max_k / max_km if max_km > 0 else 0.0                 # eq. (11)
+    oe = max_km / elapsed                                      # eq. (12)
+    return DeviceMetrics(
+        parallel_efficiency=pe,
+        load_balance=lb,
+        communication_efficiency=ce,
+        orchestration_efficiency=oe,
+        elapsed=float(elapsed),
+        n_devices=m,
+        computational_efficiency=computational_efficiency,
+    )

@@ -1,0 +1,102 @@
+"""Host-side efficiency hierarchy for accelerated platforms (paper §4.1).
+
+Extends the POP host hierarchy (Fig. 2). Three host states per rank:
+Useful (U), Device Offloading (W), MPI. New metrics (orange boxes):
+
+  Host Hybrid Parallel Efficiency  PE_host = ΣU / (E·n)              (eq. 6)
+  MPI Parallel Efficiency          MPI_PE = Σ(U+W) / (E·n)           (eq. 7)
+  Device Offload Efficiency        OE_host = ΣU / Σ(U+W)             (eq. 8)
+
+with PE_host = MPI_PE × OE_host. MPI_PE's children apply "the same
+treatment of states" (offload counts as useful):
+
+  Load Balance           LB = Σ(U+W) / (n · max(U+W))
+  Communication Eff.     CE = max(U+W) / E
+
+so MPI_PE = LB × CE, mirroring the original POP formulas.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .pop import elapsed_time
+
+__all__ = ["HostMetrics", "host_metrics"]
+
+
+@dataclass(frozen=True)
+class HostMetrics:
+    parallel_efficiency: float        # PE_host, eq. (6)
+    mpi_parallel_efficiency: float    # eq. (7)
+    communication_efficiency: float   # child of MPI PE
+    load_balance: float               # child of MPI PE
+    device_offload_efficiency: float  # eq. (8)
+    elapsed: float
+    n_processes: int
+
+    def validate(self, tol: float = 1e-9) -> None:
+        p1 = self.mpi_parallel_efficiency * self.device_offload_efficiency
+        if abs(p1 - self.parallel_efficiency) > tol:
+            raise AssertionError(f"PE_host {self.parallel_efficiency} != MPI_PE*OE {p1}")
+        p2 = self.load_balance * self.communication_efficiency
+        if abs(p2 - self.mpi_parallel_efficiency) > tol:
+            raise AssertionError(f"MPI_PE {self.mpi_parallel_efficiency} != LB*CE {p2}")
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "parallel_efficiency": self.parallel_efficiency,
+            "mpi_parallel_efficiency": self.mpi_parallel_efficiency,
+            "communication_efficiency": self.communication_efficiency,
+            "load_balance": self.load_balance,
+            "device_offload_efficiency": self.device_offload_efficiency,
+            "elapsed": self.elapsed,
+            "n_processes": self.n_processes,
+        }
+
+
+def host_metrics(
+    useful: Sequence[float],
+    offload: Sequence[float],
+    mpi: Optional[Sequence[float]] = None,
+    elapsed: Optional[float] = None,
+) -> HostMetrics:
+    """Compute eqs. (6)–(8) plus the MPI-PE children.
+
+    ``elapsed`` defaults to paper eq. (1) over the three-state totals.
+    """
+    u = np.asarray(useful, dtype=np.float64)
+    w = np.asarray(offload, dtype=np.float64)
+    if u.shape != w.shape or u.ndim != 1 or len(u) == 0:
+        raise ValueError("useful/offload must be equal-length 1-D, non-empty")
+    if np.any(u < 0) or np.any(w < 0):
+        raise ValueError("negative state duration")
+    n = len(u)
+    if elapsed is None:
+        if mpi is None:
+            raise ValueError("need mpi durations or explicit elapsed")
+        m = np.asarray(mpi, dtype=np.float64)
+        elapsed = elapsed_time(u, w + m)
+    if elapsed <= 0:
+        raise ValueError("elapsed must be positive")
+    uw = u + w
+    sum_u = float(np.sum(u))
+    sum_uw = float(np.sum(uw))
+    max_uw = float(np.max(uw))
+    pe_host = sum_u / (elapsed * n)                              # eq. (6)
+    mpi_pe = sum_uw / (elapsed * n)                              # eq. (7)
+    oe = sum_u / sum_uw if sum_uw > 0 else 0.0                   # eq. (8)
+    lb = sum_uw / (n * max_uw) if max_uw > 0 else 0.0
+    ce = max_uw / elapsed
+    return HostMetrics(
+        parallel_efficiency=pe_host,
+        mpi_parallel_efficiency=mpi_pe,
+        communication_efficiency=ce,
+        load_balance=lb,
+        device_offload_efficiency=oe,
+        elapsed=float(elapsed),
+        n_processes=n,
+    )

@@ -1,0 +1,167 @@
+"""TALP reporting: post-mortem text (paper-style) + JSON, node-scan tables.
+
+TALP's post-mortem output is "available both as plain text in a
+human-readable format and as a JSON file, enabling automated processing".
+We reproduce both, plus the paper's Tables 1–3 layout (metric hierarchy
+vs node count) and — beyond the paper — a multi-run scalability join.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Union
+
+from .analysis import TraceAnalysis
+from .device_metrics import DeviceMetrics
+from .host_metrics import HostMetrics
+from .talp import RegionResult, TalpResult
+
+__all__ = [
+    "render_text",
+    "render_tables",
+    "to_json",
+    "from_json",
+    "node_scan_table",
+]
+
+Result = Union[RegionResult, TraceAnalysis]
+
+
+def _pct(x: Optional[float]) -> str:
+    return "   n/a" if x is None else f"{100.0 * x:5.1f}%"
+
+
+def _host_lines(hm: HostMetrics) -> List[str]:
+    return [
+        f"Host    Parallel Efficiency        {_pct(hm.parallel_efficiency)}",
+        f"        |- MPI Parallel Eff.       {_pct(hm.mpi_parallel_efficiency)}",
+        f"        |   |- Comm. Eff.          {_pct(hm.communication_efficiency)}",
+        f"        |   `- Load Balance        {_pct(hm.load_balance)}",
+        f"        `- Device Offload Eff.     {_pct(hm.device_offload_efficiency)}",
+    ]
+
+
+def _device_lines(dm: DeviceMetrics) -> List[str]:
+    lines = [
+        f"Device  Parallel Efficiency        {_pct(dm.parallel_efficiency)}",
+        f"        |- Load Balance            {_pct(dm.load_balance)}",
+        f"        |- Communication Eff.      {_pct(dm.communication_efficiency)}",
+        f"        `- Orchestration Eff.      {_pct(dm.orchestration_efficiency)}",
+    ]
+    if dm.computational_efficiency is not None:
+        lines.append(
+            f"        [ext] Computational Eff.   {_pct(dm.computational_efficiency)}"
+        )
+    return lines
+
+
+def render_text(result: Result, title: Optional[str] = None) -> str:
+    """Paper-figure-style text report for one region/trace."""
+    name = getattr(result, "name", "Global")
+    n_ranks = getattr(result, "n_ranks", None) or len(result.host_states) or 0
+    n_devs = getattr(result, "n_devices", None) or len(result.device_states) or 0
+    head = title or f'TALP report - region "{name}"'
+    lines = [
+        "=" * 64,
+        f"{head}",
+        f"elapsed {result.elapsed:.6f} s | {n_ranks} rank(s) | {n_devs} device(s)",
+        "=" * 64,
+    ]
+    if result.host is not None:
+        lines += _host_lines(result.host)
+    if result.device is not None:
+        lines += _device_lines(result.device)
+    if result.host_states:
+        lines.append("-" * 64)
+        lines.append("host states (s):   rank    useful    offload        mpi")
+        for r, st in sorted(result.host_states.items()):
+            lines.append(
+                f"                  {r:5d} {st['useful']:9.4f}  {st['offload']:9.4f}  {st['mpi']:9.4f}"
+            )
+    if result.device_states:
+        lines.append("device states (s): dev     kernel     memory       idle")
+        for d, st in sorted(result.device_states.items()):
+            lines.append(
+                f"                  {d:5d} {st['kernel']:9.4f}  {st['memory']:9.4f}  {st['idle']:9.4f}"
+            )
+    lines.append("=" * 64)
+    return "\n".join(lines)
+
+
+def render_tables(result: TalpResult) -> str:
+    """Render every region of a TalpResult."""
+    parts = [render_text(r, title=f'{result.name} - region "{name}"')
+             for name, r in sorted(result.regions.items())]
+    return "\n\n".join(parts)
+
+
+def _result_dict(result: Result) -> Dict:
+    return {
+        "name": getattr(result, "name", "Global"),
+        "elapsed": result.elapsed,
+        "host_metrics": result.host.as_dict() if result.host else None,
+        "device_metrics": result.device.as_dict() if result.device else None,
+        "host_states": {str(k): v for k, v in result.host_states.items()},
+        "device_states": {str(k): v for k, v in result.device_states.items()},
+    }
+
+
+def to_json(result: Union[Result, TalpResult], indent: int = 2) -> str:
+    """Machine-readable output (TALP's JSON path)."""
+    if isinstance(result, TalpResult):
+        payload = {
+            "talp": result.name,
+            "regions": {n: _result_dict(r) for n, r in result.regions.items()},
+        }
+    else:
+        payload = _result_dict(result)
+    return json.dumps(payload, indent=indent)
+
+
+def from_json(text: str) -> Dict:
+    return json.loads(text)
+
+
+_HOST_ROWS = [
+    ("Parallel Efficiency", "parallel_efficiency"),
+    ("- MPI Parallel Eff.", "mpi_parallel_efficiency"),
+    ("    Comm. Eff.", "communication_efficiency"),
+    ("    Load Balance", "load_balance"),
+    ("- Device Offload Eff.", "device_offload_efficiency"),
+]
+_DEV_ROWS = [
+    ("Parallel Efficiency", "parallel_efficiency"),
+    ("- Load Balance", "load_balance"),
+    ("- Communication Eff.", "communication_efficiency"),
+    ("- Orchestration Eff.", "orchestration_efficiency"),
+]
+
+
+def node_scan_table(
+    results: Sequence[Result],
+    labels: Sequence[str],
+    title: str = "TALP Output",
+) -> str:
+    """Paper Tables 1–3 layout: metric hierarchy rows × run columns."""
+    if len(results) != len(labels):
+        raise ValueError("results/labels length mismatch")
+    width = max(7, max(len(str(l)) for l in labels) + 2)
+    header = f"{title}\n{'':8s}{'Metrics':28s}" + "".join(
+        f"{str(l):>{width}s}" for l in labels
+    )
+    lines = [header]
+
+    def row(side: str, label: str, values: List[Optional[float]]):
+        cells = "".join(
+            f"{'':>{width - 4}s} n/a" if v is None else f"{v:>{width}.2f}"
+            for v in values
+        )
+        lines.append(f"{side:8s}{label:28s}{cells}")
+
+    for i, (label, attr) in enumerate(_HOST_ROWS):
+        vals = [getattr(r.host, attr) if r.host else None for r in results]
+        row("Host" if i == 0 else "", label, vals)
+    for i, (label, attr) in enumerate(_DEV_ROWS):
+        vals = [getattr(r.device, attr) if r.device else None for r in results]
+        row("Device" if i == 0 else "", label, vals)
+    return "\n".join(lines)

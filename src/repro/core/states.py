@@ -1,0 +1,201 @@
+"""Execution-state model for TALP on accelerated platforms.
+
+The paper's simplified execution model (§4.1):
+
+  * Host (per MPI process/rank): three mutually exclusive states —
+    (i) ``USEFUL`` computation, (ii) ``OFFLOAD`` (blocked in
+    device-related operations: transfers, launches, synchronization),
+    (iii) ``MPI`` (blocked in cross-process communication).
+  * Device (per accelerator, streams not distinguished): three states —
+    (i) ``KERNEL`` computation (useful work), (ii) ``MEMORY`` operations,
+    (iii) ``IDLE``. Overlap between computation and communication
+    streams counts as computation.
+
+``HostTimeline`` holds per-state accumulated durations for one rank.
+``DeviceTimeline`` holds raw activity records for one device and applies
+the paper's flattening pipeline to produce the state occupancy breakdown.
+``Trace`` aggregates both sides for one monitored region/run.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from . import intervals as iv
+
+
+class HostState(enum.Enum):
+    USEFUL = "useful"
+    OFFLOAD = "offload"  # "Device Offloading" in the paper
+    MPI = "mpi"
+
+
+class DeviceActivity(enum.Enum):
+    KERNEL = "kernel"
+    MEMORY = "memory"
+
+
+class DeviceState(enum.Enum):
+    KERNEL = "kernel"
+    MEMORY = "memory"
+    IDLE = "idle"
+
+
+@dataclass
+class DeviceRecord:
+    """One raw activity record, as delivered by a backend (≙ CUPTI activity)."""
+
+    kind: DeviceActivity
+    start: float
+    end: float
+    stream: int = 0
+    name: str = ""
+
+    def __post_init__(self):
+        if self.end < self.start:
+            raise ValueError(f"record end < start: {self}")
+
+
+@dataclass
+class HostTimeline:
+    """Accumulated host-state durations for one rank.
+
+    ``useful`` may either be accumulated explicitly or derived as
+    ``elapsed - offload - mpi`` (the TALP measurement model: PMPI
+    intercepts MPI time, the CUPTI-analogue intercepts offload time,
+    everything else is useful).
+    """
+
+    rank: int = 0
+    useful: float = 0.0
+    offload: float = 0.0
+    mpi: float = 0.0
+
+    def add(self, state: HostState, duration: float) -> None:
+        if duration < 0:
+            raise ValueError("negative duration")
+        if state is HostState.USEFUL:
+            self.useful += duration
+        elif state is HostState.OFFLOAD:
+            self.offload += duration
+        else:
+            self.mpi += duration
+
+    @property
+    def elapsed(self) -> float:
+        return self.useful + self.offload + self.mpi
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"useful": self.useful, "offload": self.offload, "mpi": self.mpi}
+
+
+@dataclass
+class DeviceOccupancy:
+    """Flattened per-device state breakdown over a window."""
+
+    kernel: float
+    memory: float
+    idle: float
+
+    @property
+    def elapsed(self) -> float:
+        return self.kernel + self.memory + self.idle
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"kernel": self.kernel, "memory": self.memory, "idle": self.idle}
+
+
+@dataclass
+class DeviceTimeline:
+    """Raw activity records for one device + the paper's post-processing.
+
+    The pipeline (§4.2, backend-independent):
+      1. kernel records are flattened across streams,
+      2. memory records are flattened, then kernel-overlapping segments
+         are removed (overlap counts as computation),
+      3. remaining uncovered window time is idle.
+    """
+
+    device: int = 0
+    records: List[DeviceRecord] = field(default_factory=list)
+
+    def add(self, kind: DeviceActivity, start: float, end: float,
+            stream: int = 0, name: str = "") -> None:
+        self.records.append(DeviceRecord(kind, start, end, stream, name))
+
+    def extend(self, records: Iterable[DeviceRecord]) -> None:
+        self.records.extend(records)
+
+    def _raw(self, kind: DeviceActivity) -> np.ndarray:
+        pairs = [(r.start, r.end) for r in self.records if r.kind is kind]
+        return iv.as_intervals(pairs) if pairs else iv.EMPTY.copy()
+
+    def occupancy(self, window: Optional[Tuple[float, float]] = None) -> DeviceOccupancy:
+        kern = iv.flatten(self._raw(DeviceActivity.KERNEL))
+        mem = iv.subtract(iv.flatten(self._raw(DeviceActivity.MEMORY)), kern)
+        if window is None:
+            lo = min((r.start for r in self.records), default=0.0)
+            hi = max((r.end for r in self.records), default=0.0)
+            window = (lo, hi)
+        kern_c = iv.clip(kern, *window)
+        mem_c = iv.clip(mem, *window)
+        idle = iv.subtract(iv.gaps(iv.union(kern_c, mem_c), *window), iv.EMPTY)
+        return DeviceOccupancy(
+            kernel=iv.total(kern_c), memory=iv.total(mem_c), idle=iv.total(idle)
+        )
+
+    def state_intervals(self, window: Tuple[float, float]) -> Dict[DeviceState, np.ndarray]:
+        """Disjoint per-state intervals over a window (for trace rendering)."""
+        kern = iv.clip(iv.flatten(self._raw(DeviceActivity.KERNEL)), *window)
+        mem = iv.clip(
+            iv.subtract(iv.flatten(self._raw(DeviceActivity.MEMORY)), kern), *window
+        )
+        idle = iv.gaps(iv.union(kern, mem), *window)
+        return {DeviceState.KERNEL: kern, DeviceState.MEMORY: mem, DeviceState.IDLE: idle}
+
+
+@dataclass
+class Trace:
+    """One monitored region: host timelines per rank + device timelines.
+
+    ``elapsed`` follows paper eq. (1): E = max_i (D_useful_i + D_not_useful_i)
+    unless an explicit window is provided (then E = window span, which is
+    what the online runtime backend uses).
+    """
+
+    hosts: Dict[int, HostTimeline] = field(default_factory=dict)
+    devices: Dict[int, DeviceTimeline] = field(default_factory=dict)
+    window: Optional[Tuple[float, float]] = None
+    name: str = "Global"
+
+    def host(self, rank: int) -> HostTimeline:
+        if rank not in self.hosts:
+            self.hosts[rank] = HostTimeline(rank=rank)
+        return self.hosts[rank]
+
+    def device(self, dev: int) -> DeviceTimeline:
+        if dev not in self.devices:
+            self.devices[dev] = DeviceTimeline(device=dev)
+        return self.devices[dev]
+
+    @property
+    def elapsed(self) -> float:
+        if self.window is not None:
+            return self.window[1] - self.window[0]
+        if not self.hosts:
+            # device-only trace: use the union span of device activity
+            spans = [
+                d.occupancy().elapsed for d in self.devices.values()
+            ]
+            return max(spans, default=0.0)
+        return max(h.elapsed for h in self.hosts.values())
+
+    def device_occupancies(self) -> Dict[int, DeviceOccupancy]:
+        win = self.window
+        if win is None and self.hosts:
+            win = (0.0, self.elapsed)
+        return {d: tl.occupancy(win) for d, tl in self.devices.items()}

@@ -1,0 +1,289 @@
+"""TalpMonitor — the TALP measurement engine (paper §3.2, §4.2), JAX-adapted.
+
+Mirrors TALP's design:
+
+  * **Region API** (≙ TALP user-level API): ``with monitor.region("solver")``
+    — regions may nest and re-open; a ``Global`` region always exists.
+  * **Host state accounting**: explicit ``offload()`` / ``mpi()`` scopes
+    (≙ CUPTI runtime callbacks / PMPI interception); everything else in
+    an open region is *Useful* — exactly TALP's measurement model.
+  * **Device activity records** arrive asynchronously from a pluggable
+    backend (≙ CUPTI/rocprofiler activity buffers) and are
+    post-processed with the paper's flattening pipeline at ``finalize``
+    (or at an online ``sample()``).
+  * **Online + post-mortem**: ``sample()`` returns live metrics;
+    ``finalize()`` produces the full per-region report (text/JSON via
+    :mod:`repro.core.report`).
+
+Transparency: ``monitor.instrument(fn)`` wraps a jitted callable so the
+application code needs no changes (≙ LD_PRELOAD).
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import intervals as ivx
+from .device_metrics import DeviceMetrics, device_metrics
+from .host_metrics import HostMetrics, host_metrics
+from .states import DeviceActivity, DeviceTimeline, HostState
+from .tree import MetricNode, device_tree, host_tree
+
+__all__ = ["TalpMonitor", "RegionResult", "TalpResult"]
+
+
+@dataclass
+class _RegionAcc:
+    """Accumulator for one (region, rank)."""
+
+    windows: List[Tuple[float, float]] = field(default_factory=list)
+    open_since: Optional[float] = None
+    offload: float = 0.0
+    mpi: float = 0.0
+
+    def elapsed(self, now: Optional[float] = None) -> float:
+        tot = sum(e - s for s, e in self.windows)
+        if self.open_since is not None and now is not None:
+            tot += max(0.0, now - self.open_since)
+        return tot
+
+    def window_intervals(self, now: Optional[float] = None) -> np.ndarray:
+        w = list(self.windows)
+        if self.open_since is not None and now is not None:
+            w.append((self.open_since, now))
+        return ivx.flatten(ivx.as_intervals(w)) if w else ivx.EMPTY.copy()
+
+
+@dataclass
+class RegionResult:
+    name: str
+    elapsed: float
+    n_ranks: int
+    n_devices: int
+    host: Optional[HostMetrics]
+    device: Optional[DeviceMetrics]
+    host_states: Dict[int, Dict[str, float]]
+    device_states: Dict[int, Dict[str, float]]
+
+    def trees(self) -> Dict[str, MetricNode]:
+        out: Dict[str, MetricNode] = {}
+        if self.host is not None:
+            out["host"] = host_tree(self.host)
+        if self.device is not None:
+            out["device"] = device_tree(self.device)
+        return out
+
+
+@dataclass
+class TalpResult:
+    name: str
+    regions: Dict[str, RegionResult]
+
+    def __getitem__(self, region: str) -> RegionResult:
+        return self.regions[region]
+
+
+class TalpMonitor:
+    """Lightweight region/state monitor for one process ("rank")."""
+
+    GLOBAL = "Global"
+
+    def __init__(
+        self,
+        name: str = "talp",
+        rank: int = 0,
+        clock: Callable[[], float] = time.perf_counter,
+        backend: Optional[object] = None,
+        auto_start: bool = True,
+    ):
+        self.name = name
+        self.rank = rank
+        self.clock = clock
+        self.backend = backend
+        # region name -> rank -> accumulator  (single-process monitor has
+        # one rank; merged results may carry many).
+        self._acc: Dict[str, _RegionAcc] = {}
+        self._region_stack: List[str] = []
+        self._state: Optional[HostState] = None
+        self._state_since: Optional[float] = None
+        self.devices: Dict[int, DeviceTimeline] = {}
+        if backend is not None and hasattr(backend, "start"):
+            backend.start()
+        if auto_start:
+            self.open_region(self.GLOBAL)
+
+    # ------------------------------------------------------------------
+    # Region API (TALP user-level API analogue)
+    # ------------------------------------------------------------------
+    def open_region(self, name: str) -> None:
+        acc = self._acc.setdefault(name, _RegionAcc())
+        if acc.open_since is not None:
+            raise RuntimeError(f"region {name!r} already open")
+        acc.open_since = self.clock()
+        self._region_stack.append(name)
+
+    def close_region(self, name: str) -> None:
+        if not self._region_stack or self._region_stack[-1] != name:
+            raise RuntimeError(
+                f"region close mismatch: {name!r} vs stack {self._region_stack}"
+            )
+        acc = self._acc[name]
+        now = self.clock()
+        acc.windows.append((acc.open_since, now))
+        acc.open_since = None
+        self._region_stack.pop()
+
+    @contextmanager
+    def region(self, name: str):
+        self.open_region(name)
+        try:
+            yield self
+        finally:
+            self.close_region(name)
+
+    # ------------------------------------------------------------------
+    # Host state scopes (CUPTI-runtime-callback / PMPI analogue)
+    # ------------------------------------------------------------------
+    @contextmanager
+    def _state_scope(self, state: HostState):
+        if self._state is not None:
+            raise RuntimeError(f"nested host state {state} inside {self._state}")
+        self._state = state
+        t0 = self.clock()
+        try:
+            yield
+        finally:
+            dt = self.clock() - t0
+            self._state = None
+            self._charge(state, dt)
+
+    def _charge(self, state: HostState, dt: float) -> None:
+        """Charge a non-useful duration to every open region."""
+        for name in self._region_stack:
+            acc = self._acc[name]
+            if state is HostState.OFFLOAD:
+                acc.offload += dt
+            elif state is HostState.MPI:
+                acc.mpi += dt
+
+    def offload(self):
+        """Host blocked in device dispatch/transfer/sync."""
+        return self._state_scope(HostState.OFFLOAD)
+
+    def mpi(self):
+        """Host blocked waiting on other ranks (control-plane sync)."""
+        return self._state_scope(HostState.MPI)
+
+    # ------------------------------------------------------------------
+    # Device records
+    # ------------------------------------------------------------------
+    def device(self, dev: int) -> DeviceTimeline:
+        if dev not in self.devices:
+            self.devices[dev] = DeviceTimeline(device=dev)
+        return self.devices[dev]
+
+    def add_device_record(
+        self, dev: int, kind: DeviceActivity, start: float, end: float,
+        stream: int = 0, name: str = "",
+    ) -> None:
+        self.device(dev).add(kind, start, end, stream, name)
+
+    def _flush_backend(self) -> None:
+        if self.backend is not None and hasattr(self.backend, "flush"):
+            for dev, rec in self.backend.flush():
+                self.device(dev).records.append(rec)
+
+    # ------------------------------------------------------------------
+    # Transparent instrumentation
+    # ------------------------------------------------------------------
+    def instrument(self, fn: Callable, device: int = 0, name: str = "") -> Callable:
+        """Wrap a (jitted) callable: host time blocked on it = Offload,
+        the execution window = a device Kernel record."""
+        import jax
+
+        label = name or getattr(fn, "__name__", "fn")
+
+        def wrapped(*args, **kwargs):
+            t0 = self.clock()
+            with self.offload():
+                out = fn(*args, **kwargs)
+                out = jax.block_until_ready(out)
+            t1 = self.clock()
+            self.add_device_record(device, DeviceActivity.KERNEL, t0, t1, name=label)
+            return out
+
+        wrapped.__name__ = f"talp_{label}"
+        return wrapped
+
+    # ------------------------------------------------------------------
+    # Results
+    # ------------------------------------------------------------------
+    def _region_result(self, name: str, now: Optional[float]) -> RegionResult:
+        acc = self._acc[name]
+        elapsed = acc.elapsed(now)
+        windows = acc.window_intervals(now)
+        useful = max(0.0, elapsed - acc.offload - acc.mpi)
+        hm = (
+            host_metrics([useful], [acc.offload], [acc.mpi], elapsed=elapsed)
+            if elapsed > 0
+            else None
+        )
+        dev_states: Dict[int, Dict[str, float]] = {}
+        kernels: List[float] = []
+        memories: List[float] = []
+        for dev, tl in sorted(self.devices.items()):
+            kern = ivx.flatten(
+                ivx.as_intervals(
+                    [(r.start, r.end) for r in tl.records if r.kind is DeviceActivity.KERNEL]
+                )
+            )
+            mem = ivx.subtract(
+                ivx.flatten(
+                    ivx.as_intervals(
+                        [(r.start, r.end) for r in tl.records if r.kind is DeviceActivity.MEMORY]
+                    )
+                ),
+                kern,
+            )
+            k_in = ivx.total(ivx.intersect(kern, windows)) if len(windows) else 0.0
+            m_in = ivx.total(ivx.intersect(mem, windows)) if len(windows) else 0.0
+            idle = max(0.0, elapsed - k_in - m_in)
+            dev_states[dev] = {"kernel": k_in, "memory": m_in, "idle": idle}
+            kernels.append(k_in)
+            memories.append(m_in)
+        dm = (
+            device_metrics(kernels, memories, elapsed)
+            if kernels and elapsed > 0
+            else None
+        )
+        return RegionResult(
+            name=name,
+            elapsed=elapsed,
+            n_ranks=1,
+            n_devices=len(kernels),
+            host=hm,
+            device=dm,
+            host_states={self.rank: {"useful": useful, "offload": acc.offload, "mpi": acc.mpi}},
+            device_states=dev_states,
+        )
+
+    def sample(self, region: Optional[str] = None) -> RegionResult:
+        """Online metrics for an open (or closed) region — TALP's runtime mode."""
+        self._flush_backend()
+        return self._region_result(region or self.GLOBAL, now=self.clock())
+
+    def finalize(self) -> TalpResult:
+        """Close remaining regions and produce the post-mortem result."""
+        now = self.clock()
+        while self._region_stack:
+            self.close_region(self._region_stack[-1])
+        self._flush_backend()
+        if self.backend is not None and hasattr(self.backend, "stop"):
+            self.backend.stop()
+        regions = {name: self._region_result(name, now=None) for name in self._acc}
+        return TalpResult(name=self.name, regions=regions)

@@ -1,0 +1,111 @@
+"""Multiplicative metric trees (paper Figs. 1–3).
+
+POP metrics are organized hierarchically where each parent is the
+product of its children. ``MetricNode`` captures that structure
+generically; builders assemble the paper's host and device trees from
+the computed metric dataclasses, and ``validate`` enforces the
+multiplicative invariant (a property test target).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional
+
+from .device_metrics import DeviceMetrics
+from .host_metrics import HostMetrics
+
+__all__ = ["MetricNode", "host_tree", "device_tree"]
+
+
+@dataclass
+class MetricNode:
+    name: str
+    value: float
+    children: List["MetricNode"] = field(default_factory=list)
+    # Leaf metrics that are *not* multiplicative children (annotations):
+    multiplicative: bool = True
+
+    def validate(self, tol: float = 1e-6) -> None:
+        mult_children = [c for c in self.children if c.multiplicative]
+        if mult_children:
+            prod = 1.0
+            for c in mult_children:
+                prod *= c.value
+            if abs(prod - self.value) > tol:
+                raise AssertionError(
+                    f"{self.name}: value {self.value:.6f} != product of "
+                    f"children {prod:.6f}"
+                )
+        for c in self.children:
+            c.validate(tol)
+
+    def walk(self) -> Iterator["MetricNode"]:
+        yield self
+        for c in self.children:
+            yield from c.walk()
+
+    def find(self, name: str) -> Optional["MetricNode"]:
+        for node in self.walk():
+            if node.name == name:
+                return node
+        return None
+
+    def as_dict(self) -> Dict:
+        return {
+            "name": self.name,
+            "value": self.value,
+            "children": [c.as_dict() for c in self.children],
+        }
+
+    @staticmethod
+    def from_dict(d: Dict) -> "MetricNode":
+        return MetricNode(
+            name=d["name"],
+            value=d["value"],
+            children=[MetricNode.from_dict(c) for c in d.get("children", [])],
+        )
+
+
+def host_tree(hm: HostMetrics) -> MetricNode:
+    """Paper Fig. 2 (host resources); new metrics are the orange boxes."""
+    return MetricNode(
+        "Parallel Efficiency",
+        hm.parallel_efficiency,
+        children=[
+            MetricNode(
+                "MPI Parallel Eff.",
+                hm.mpi_parallel_efficiency,
+                children=[
+                    MetricNode("Comm. Eff.", hm.communication_efficiency),
+                    MetricNode("Load Balance", hm.load_balance),
+                ],
+            ),
+            MetricNode("Device Offload Eff.", hm.device_offload_efficiency),
+        ],
+    )
+
+
+def device_tree(dm: DeviceMetrics) -> MetricNode:
+    """Paper Fig. 3 (device resources), Parallel Efficiency branch."""
+    root = MetricNode(
+        "Parallel Efficiency",
+        dm.parallel_efficiency,
+        children=[
+            MetricNode("Load Balance", dm.load_balance),
+            MetricNode("Communication Eff.", dm.communication_efficiency),
+            MetricNode("Orchestration Eff.", dm.orchestration_efficiency),
+        ],
+    )
+    if dm.computational_efficiency is not None:
+        # Beyond-paper: the paper's future-work branch. Not a
+        # multiplicative child of Parallel Efficiency (it is the sibling
+        # branch under Device Efficiency), so mark non-multiplicative.
+        root.children.append(
+            MetricNode(
+                "Computational Eff. (ext)",
+                dm.computational_efficiency,
+                multiplicative=False,
+            )
+        )
+    return root

@@ -1,0 +1,3 @@
+from . import flash_attention, ssd
+
+__all__ = ["flash_attention", "ssd"]

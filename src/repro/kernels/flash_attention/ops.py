@@ -1,0 +1,53 @@
+"""Dispatching wrapper for attention.
+
+``impl='xla'`` (default) → the chunked online-softmax jnp path in
+``repro.models.attention`` (portable; used by dry-runs / CPU);
+``impl='pallas'`` → the TPU flash kernel; ``impl='pallas_interpret'`` →
+the kernel body interpreted on CPU (correctness)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from . import ref as _ref
+
+__all__ = ["attention", "set_default_impl"]
+
+_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _IMPL
+    if impl not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(impl)
+    _IMPL = impl
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    impl: Optional[str] = None,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    impl = impl or _IMPL
+    if impl == "xla":
+        from ...models.attention import chunked_attention
+
+        b, s = q.shape[0], q.shape[1]
+        t = k.shape[1]
+        qpos = jnp.broadcast_to(jnp.arange(t - s, t, dtype=jnp.int32), (b, s))
+        kpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        return chunked_attention(q, k, v, qpos, kpos, window=window,
+                                 softcap=softcap, kv_chunk=kv_chunk)
+    return _kernel.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=(impl == "pallas_interpret"),
+    )

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive full-softmax
+GQA attention with causal/sliding-window masking and logit soft-capping.
+Materializes the full score matrix — correctness reference only."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_reference"]
+
+
+def attention_reference(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, T, K, D)
+    v: jax.Array,            # (B, T, K, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, nk = k.shape[1], k.shape[2]
+    g = h // nk
+    qr = q.reshape(b, s, nk, g, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bskgt", qr, kf) * (d ** -0.5)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        # aligned ends: query i attends to keys ≤ i + (t - s)
+        mask &= cols <= rows + (t - s)
+        if window is not None:
+            mask &= cols > rows + (t - s) - window
+    scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, vf)
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel for the Mamba-2 SSD primitive (chunked scan).
+
+TPU adaptation of the SSD algorithm [arXiv:2405.21060]: the GPU
+implementation leans on warp-level parallel scans; on TPU we instead
+exploit the sequential minor-to-major grid order — the grid is
+``(batch, head, L/Q)`` with the chunk index innermost, and the running
+(P, N) state lives in VMEM scratch, carried across chunk iterations for
+a fixed (batch, head). Within a chunk the dual quadratic form runs on
+the MXU ((Q, N)·(N, Q) and (Q, Q)·(Q, P) matmuls); across chunks the
+state update is a rank-Q outer-product accumulation — exactly the
+structure the systolic array wants, no warp shuffles required.
+
+B/C are pre-broadcast from groups to heads by the ops wrapper so the
+kernel sees per-head (Q, N) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref,      # (Q, P)
+    dt_ref,     # (Q, 1)
+    a_ref,      # (1, 1)   per-head decay rate
+    b_ref,      # (Q, N)
+    c_ref,      # (Q, N)
+    d_ref,      # (1, 1)   skip coefficient
+    y_ref,      # (Q, P)
+    state_ref,  # scratch (P, N) f32
+    *,
+    q_chunk: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[...].astype(jnp.float32)[:, 0]  # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)
+    bmat = b_ref[...].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[...].astype(jnp.float32)       # (Q, N)
+
+    da = dt * a                                 # (Q,)
+    cum = jnp.cumsum(da)                        # (Q,)
+
+    # ---- intra-chunk dual form ----
+    seg = cum[:, None] - cum[None, :]           # (Q, Q) = cum_i - cum_j
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (Q, Q) = C_i · B_j
+    gate = decay * scores * dt[None, :]
+    y = jax.lax.dot_general(
+        gate, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (Q, P)
+
+    # ---- inter-chunk: contribution of the carried state ----
+    # y_inter_i = exp(cum_i) * C_i · S_prevᵀ  → (Q,N)·(N,P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- state update: S = S·exp(cum_last) + Σ_j w_j x_j B_jᵀ ----
+    w = jnp.exp(cum[-1] - cum) * dt              # (Q,)
+    outer = jax.lax.dot_general(
+        x * w[:, None], bmat, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (P, N)
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + outer
+
+    # ---- skip connection + write ----
+    y = y + d_ref[0, 0].astype(jnp.float32) * x
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def ssd_pallas(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)
+    a: jax.Array,       # (H,)
+    b_mat: jax.Array,   # (B, L, G, N)
+    c_mat: jax.Array,   # (B, L, G, N)
+    chunk: int = 128,
+    d_skip: Optional[jax.Array] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    if l % chunk != 0:
+        raise ValueError(f"L {l} must divide chunk {chunk}")
+    rep = h // g
+    bb = jnp.repeat(b_mat, rep, axis=2)          # (B, L, H, N)
+    cb = jnp.repeat(c_mat, rep, axis=2)
+    dt3 = dt[..., None]                          # (B, L, H, 1)
+    a2 = a.reshape(h, 1)
+    d2 = (d_skip if d_skip is not None else jnp.zeros((h,), jnp.float32)).reshape(h, 1)
+
+    grid = (bsz, h, l // chunk)
+    kernel = functools.partial(_ssd_kernel, q_chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, p),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),   # x
+            pl.BlockSpec((None, chunk, None, 1),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),   # dt
+            pl.BlockSpec((1, 1),
+                         lambda bi, hi, ci: (hi, 0)),           # a
+            pl.BlockSpec((None, chunk, None, n),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),   # B
+            pl.BlockSpec((None, chunk, None, n),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),   # C
+            pl.BlockSpec((1, 1),
+                         lambda bi, hi, ci: (hi, 0)),           # d_skip
+        ],
+        out_specs=pl.BlockSpec((None, chunk, None, p),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, l, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )
+    return out(x, dt3, a2, bb, cb, d2)

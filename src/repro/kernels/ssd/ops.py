@@ -1,0 +1,48 @@
+"""Dispatching wrapper for the SSD primitive.
+
+``impl='xla'`` (default) runs the chunked pure-jnp oracle — the portable
+path used by training, dry-runs and CPU tests. ``impl='pallas'`` runs the
+TPU Pallas kernel; ``impl='pallas_interpret'`` runs the same kernel body
+in interpreter mode (CPU correctness validation).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from . import ref
+
+__all__ = ["ssd"]
+
+_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _IMPL
+    if impl not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(impl)
+    _IMPL = impl
+
+
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    chunk: int = 256,
+    d_skip: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    impl = impl or _IMPL
+    if impl == "xla":
+        return ref.ssd_reference(x, dt, a, b_mat, c_mat, chunk=chunk,
+                                 d_skip=d_skip)
+    from . import kernel
+    return kernel.ssd_pallas(
+        x, dt, a, b_mat, c_mat, chunk=chunk, d_skip=d_skip,
+        interpret=(impl == "pallas_interpret"),
+    )

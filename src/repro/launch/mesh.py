@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the default single device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh", "describe_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one pod, 256 chips) or 2×16×16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (dry-run only)"
+        )
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None):
+    """General mesh helper (tests / elastic rescaling)."""
+    n = int(np.prod(shape))
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devices)}")
+    dev = np.asarray(devices[:n]).reshape(tuple(shape))
+    return jax.sharding.Mesh(dev, tuple(axes))
+
+
+def describe_mesh(mesh) -> str:
+    return "x".join(
+        f"{mesh.shape[a]}{a}" for a in mesh.axis_names
+    )

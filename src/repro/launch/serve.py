@@ -1,0 +1,120 @@
+"""Batched serving driver: prefill + decode loop under TALP monitoring.
+
+Requests are prompt batches; the loop prefills the batch, grows the
+caches, then decodes tokens autoregressively. Host/device states are
+TALP-monitored exactly as in training — the serving profile typically
+shows high Offload (host blocked on decode steps) and the per-step
+Orchestration gap, which is the paper's framing for "the host cannot
+feed the device."
+
+Usage (CPU-sized):
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --requests 4 --prompt-len 32 --gen-len 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, list_configs, smoke_config
+from ..core.backends import RuntimeBackend
+from ..core.report import render_tables, to_json
+from ..core.talp import TalpMonitor
+from ..models import lm
+from .steps import make_prefill_step, make_serve_step
+
+__all__ = ["serve", "main"]
+
+
+def serve(
+    cfg,
+    requests: int = 4,
+    prompt_len: int = 32,
+    gen_len: int = 16,
+    seed: int = 0,
+    talp_json: str = None,
+    verbose: bool = True,
+):
+    backend = RuntimeBackend()
+    mon = TalpMonitor("serve", backend=backend)
+    key = jax.random.PRNGKey(seed)
+
+    with mon.region("init"):
+        params = lm.init_params(cfg, key)
+        params = jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            params,
+        )
+        params = jax.block_until_ready(params)
+
+    prefill_fn = jax.jit(make_prefill_step(cfg))
+    decode_fn = jax.jit(make_serve_step(cfg), donate_argnums=3)
+
+    if cfg.frontend == "token":
+        prompts = jax.random.randint(
+            key, (requests, prompt_len), 0, cfg.vocab_size, jnp.int32
+        )
+    else:
+        prompts = jax.random.normal(
+            key, (requests, prompt_len, cfg.d_model), jnp.bfloat16
+        )
+
+    tokens_out = []
+    with mon.region("prefill"):
+        h = backend.launch(prefill_fn, params, prompts, name="prefill")
+        with mon.offload():
+            logits, caches, pos = backend.wait(h)
+    with mon.region("grow_cache"):
+        caches = lm.grow_caches(cfg, caches, prompt_len + gen_len)
+
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+    with mon.region("decode"):
+        for t in range(gen_len):
+            tokens_out.append(np.asarray(tok))
+            if cfg.frontend == "token":
+                inp = tok[:, None]
+            else:  # embed-frontend stub: feed a frame embedding
+                inp = jnp.zeros((requests, 1, cfg.d_model), jnp.bfloat16)
+            h = backend.launch(decode_fn, params, inp, pos, caches,
+                               name=f"decode_{t}")
+            with mon.offload():
+                logits, caches, pos = backend.wait(h)
+            tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+
+    result = mon.finalize()
+    if verbose:
+        print(render_tables(result))
+    if talp_json:
+        with open(talp_json, "w") as f:
+            f.write(to_json(result))
+    return np.stack(tokens_out, axis=1), result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_configs(), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--talp-json", default=None)
+    args = ap.parse_args()
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    t0 = time.time()
+    tokens, _ = serve(cfg, args.requests, args.prompt_len, args.gen_len,
+                      talp_json=args.talp_json)
+    dt = time.time() - t0
+    n = tokens.size
+    print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from .lm import (
+    decode_step,
+    init_decode_caches,
+    init_params,
+    param_count,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "decode_step",
+    "init_decode_caches",
+    "init_params",
+    "param_count",
+    "prefill",
+    "train_loss",
+]

@@ -1,0 +1,149 @@
+"""Shared neural building blocks: norms, initializers, rotary embeddings
+(standard + multimodal M-RoPE), logit soft-capping, chunked cross-entropy.
+
+All modules are pure functions over explicit parameter pytrees (dicts of
+jnp arrays). Parameters are stored in ``param_dtype`` (fp32 master by
+default) and cast to ``compute_dtype`` (bf16) at use — the MaxText-style
+mixed-precision convention.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "truncated_normal",
+    "rms_norm",
+    "soft_cap",
+    "rope_frequencies",
+    "apply_rope",
+    "apply_mrope",
+    "chunked_softmax_xent",
+]
+
+
+def truncated_normal(key, shape, scale: float, dtype=jnp.float32):
+    """Fan-in scaled truncated-normal initializer."""
+    stddev = scale / math.sqrt(max(1, shape[0]))
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 accumulation; returns x.dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def soft_cap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings, shape (head_dim//2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Apply rotation given per-(pos, half-dim) angles.
+
+    x: (..., S, H, D); angles: broadcastable to (..., S, 1, D/2).
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Standard RoPE. x: (B, S, H, D); positions: (B, S) int."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # (D/2,)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # (B,S,1,D/2)
+    return _rotate(x, angles)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: Sequence[int],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal rotary embedding (M-RoPE).
+
+    The half-dim frequency bands are split into ``sections`` (e.g.
+    (16, 24, 24) = temporal/height/width for D=128) and each section
+    rotates by its own position stream. ``positions``: (3, B, S).
+    For text tokens all three streams coincide (the stub frontend
+    supplies arange for each).
+    """
+    half = x.shape[-1] // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to {half}")
+    freqs = rope_frequencies(x.shape[-1], theta)          # (half,)
+    # Build per-band position selector: band i uses positions[stream(i)]
+    stream_idx = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )                                                      # (half,)
+    pos = positions.astype(jnp.float32)                    # (3, B, S)
+    pos_per_band = jnp.take(pos, stream_idx, axis=0)       # (half, B, S)
+    pos_per_band = jnp.moveaxis(pos_per_band, 0, -1)       # (B, S, half)
+    angles = pos_per_band[..., None, :] * freqs            # (B, S, 1, half)
+    return _rotate(x, angles)
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,
+    unembed: jax.Array,
+    labels: jax.Array,
+    chunk: int = 16384,
+    final_softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over a large vocabulary without materializing the
+    full (tokens, vocab) logits tensor.
+
+    hidden: (T, M); unembed: (M, V); labels: (T,) int32 (-1 = masked).
+    Scans over token chunks; per-chunk logits are fp32. Returns
+    (sum_loss, token_count). Gradients flow through the scan.
+    """
+    t = hidden.shape[0]
+    if t % chunk != 0:
+        # pad to a multiple; padded tokens are masked out
+        pad = chunk - t % chunk
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, pad),), constant_values=-1)
+        t = hidden.shape[0]
+    n_chunks = t // chunk
+    hidden = hidden.reshape(n_chunks, chunk, hidden.shape[-1])
+    labels = labels.reshape(n_chunks, chunk)
+
+    def body(acc, xs):
+        h, y = xs
+        logits = (h @ unembed.astype(h.dtype)).astype(jnp.float32)
+        logits = soft_cap(logits, final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(y, 0)[:, None], axis=-1
+        )[:, 0]
+        mask = (y >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - picked) * mask)
+        count = jnp.sum(mask)
+        return (acc[0] + loss, acc[1] + count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hidden, labels)
+    )
+    return loss_sum, count

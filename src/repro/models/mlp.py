@@ -1,0 +1,30 @@
+"""Dense SwiGLU feed-forward block."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import truncated_normal
+
+__all__ = ["init_mlp_params", "mlp_forward"]
+
+
+def init_mlp_params(key, cfg) -> Dict[str, jax.Array]:
+    m, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal(k1, (m, f), 1.0, dtype),
+        "w_up": truncated_normal(k2, (m, f), 1.0, dtype),
+        "w_down": truncated_normal(k3, (f, m), 1.0, dtype),
+    }
+
+
+def mlp_forward(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    return (g * u) @ p["w_down"].astype(dt)

@@ -1,0 +1,228 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware required).
+
+Per (arch × shape × mesh) the dry-run supplies:
+  * ``compiled.cost_analysis()`` → per-device HLO FLOPs / bytes accessed,
+  * ``compiled.as_text()``       → post-SPMD HLO, scanned for collective
+    ops (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) whose result-shape bytes we sum per category,
+  * ``compiled.memory_analysis()`` → per-device footprint (fits-HBM proof).
+
+Three roofline terms (seconds, per step, per device):
+    compute    = FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    memory     = bytes / HBM_bw                (819 GB/s)
+    collective = collective_bytes / link_bw    (~50 GB/s/link ICI)
+
+Conventions: the compiled module is the per-device SPMD program, so all
+counts are per-device; collective bytes use the op *result* shard size
+(≈ traffic through each device's links; calibrated in
+tests/test_roofline_calibration.py and consistent across perf
+iterations, which is what the §Perf loop needs).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from ..core.backends.analytical import HardwareSpec, TPU_V5E
+
+__all__ = [
+    "CollectiveStats",
+    "RooflineReport",
+    "collective_bytes_from_hlo",
+    "build_report",
+]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# result type(s) then op name, e.g.
+#   %ag = bf16[8,128]{1,0} all-gather(...)
+#   %ar = (f32[4], f32[4]) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<types>\([^=]*?\)|\S+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _type_bytes(types: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(types):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in a post-SPMD module.
+    Async pairs are counted once (``-start`` only; bare ops as-is)."""
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue
+        kind = m.group("op")
+        nbytes = _type_bytes(m.group("types"))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device, per-step
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_detail: Dict[str, int]
+    collective_count: int
+    model_flops: float          # useful model FLOPs per device per step
+    # memory analysis (bytes per device)
+    peak_memory: Optional[float] = None
+    argument_size: Optional[float] = None
+    output_size: Optional[float] = None
+    temp_size: Optional[float] = None
+    hw: HardwareSpec = TPU_V5E
+
+    # ---- derived terms (seconds) ----
+    @property
+    def compute_s(self) -> float:
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Bound model: overlapped compute/HBM, exposed collectives."""
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / HLO FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of peak on the bound model: useful FLOPs
+        over peak·step-time. Meaningful for train/prefill; decode steps
+        are bandwidth-bound by definition — see ``bound_fraction``."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops / self.hw.peak_flops) / self.step_s
+
+    @property
+    def bound_fraction(self) -> float:
+        """Dominant-term share of the modeled step: 1.0 = the step is
+        purely its own roofline bound with everything else hidden. The
+        per-cell optimization target for bandwidth-bound (decode) cells."""
+        if self.step_s <= 0:
+            return 0.0
+        return max(self.compute_s, self.memory_s, self.collective_s) / self.step_s
+
+    def to_dict(self) -> Dict:
+        d = {
+            k: v for k, v in asdict(self).items() if k != "hw"
+        }
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            step_s=self.step_s,
+            useful_flop_ratio=self.useful_flop_ratio,
+            roofline_fraction=self.roofline_fraction,
+            bound_fraction=self.bound_fraction,
+        )
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+
+def build_report(
+    arch: str,
+    shape: str,
+    mesh_desc: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    model_flops_global: float,
+    memory_analysis=None,
+    hw: HardwareSpec = TPU_V5E,
+) -> RooflineReport:
+    stats = collective_bytes_from_hlo(hlo_text)
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    rep = RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_desc,
+        chips=chips,
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=float(stats.total_bytes),
+        collective_detail=dict(stats.bytes_by_kind),
+        collective_count=stats.total_count,
+        model_flops=model_flops_global / chips,
+        hw=hw,
+    )
+    if memory_analysis is not None:
+        for attr, key in (
+            ("peak_memory", "peak_memory_in_bytes"),
+            ("argument_size", "argument_size_in_bytes"),
+            ("output_size", "output_size_in_bytes"),
+            ("temp_size", "temp_size_in_bytes"),
+        ):
+            val = getattr(memory_analysis, key, None)
+            if val is not None:
+                setattr(rep, attr, float(val))
+    return rep

@@ -1,0 +1,80 @@
+"""Activation-sharding hints, threaded to the model via a trace-time
+context (the model code stays mesh-agnostic).
+
+``activation_sharding(P(fsdp, "model", None))`` makes every layer
+boundary constrain the residual stream to that spec — batch over the
+FSDP axes and *sequence over the model axis* (sequence parallelism).
+With full remat the saved per-layer residual is exactly this buffer, so
+the constraint divides the dominant activation-memory term by the model
+axis size; XLA inserts all-gather/reduce-scatter pairs around the
+attention/FFN compute (the standard SP trade of collective bytes for
+HBM footprint).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["activation_sharding", "constrain", "current_spec",
+           "moe_weight_sharding", "current_moe_specs"]
+
+_SPEC: Optional[P] = None
+_MOE_SPECS = None   # (gate/up spec, down spec) for gathered MoE weights
+
+
+@contextmanager
+def activation_sharding(spec: Optional[P]):
+    global _SPEC
+    prev = _SPEC
+    _SPEC = spec
+    try:
+        yield
+    finally:
+        _SPEC = prev
+
+
+def current_spec() -> Optional[P]:
+    return _SPEC
+
+
+@contextmanager
+def moe_weight_sharding(gate_up: Optional[P], down: Optional[P]):
+    """Compute-time layout for gathered MoE expert weights (§Perf A4/A5):
+    the FSDP-sharded d_model dim must be gathered before the expert
+    einsums, while expert/d_ff dims keep EP/TP — the launcher pins the
+    exact spec because XLA's free placement (UNCONSTRAINED) picked
+    partial-sum all-reduces of the fat (g,e,c,f) activations instead."""
+    global _MOE_SPECS
+    prev = _MOE_SPECS
+    _MOE_SPECS = (gate_up, down)
+    try:
+        yield
+    finally:
+        _MOE_SPECS = prev
+
+
+def current_moe_specs():
+    return _MOE_SPECS
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Apply the ambient activation spec to a (B, S, M) tensor."""
+    if _SPEC is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, _SPEC)
+
+
+def constrain_seq_gathered(x: jax.Array) -> jax.Array:
+    """Batch-sharded but sequence-REPLICATED layout for a (B, S, ...)
+    tensor: the explicit SP→attention gather point. Pinning this on the
+    (small, bf16) K/V projections stops XLA from instead all-gathering
+    the fp32 internals of the preceding norm (§Perf iter C4)."""
+    if _SPEC is None:
+        return x
+    batch_ax = _SPEC[0] if len(_SPEC) > 0 else None
+    spec = P(*((batch_ax,) + (None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,84 @@
+"""Paper §5.2 validation: the application emulators reproduce the
+structure of Tables 1–3 (metric levels at 1 node; scaling trends to 8)."""
+
+import pytest
+
+from repro.appsim import node_scan
+
+
+@pytest.fixture(scope="module")
+def scans():
+    return {app: node_scan(app) for app in ("sod2d", "fall3d", "xshells")}
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — SOD2D
+# ---------------------------------------------------------------------------
+def test_sod2d_table1(scans):
+    s = scans["sod2d"]
+    # n=1 column (paper: MPI PE .94, CE .95, LB 1.0, DOE .06, dev PE .87)
+    a1 = s[1]
+    assert a1.host.mpi_parallel_efficiency == pytest.approx(0.94, abs=0.02)
+    assert a1.host.communication_efficiency == pytest.approx(0.95, abs=0.02)
+    assert a1.host.load_balance == pytest.approx(1.0, abs=0.02)
+    assert a1.host.device_offload_efficiency == pytest.approx(0.06, abs=0.01)
+    assert a1.device.parallel_efficiency == pytest.approx(0.87, abs=0.03)
+    # trends to 8 nodes: CE and Orchestration degrade, DOE flat, LB high
+    a8 = s[8]
+    assert a8.host.communication_efficiency == pytest.approx(0.68, abs=0.04)
+    assert a8.device.orchestration_efficiency == pytest.approx(0.60, abs=0.06)
+    assert a8.host.device_offload_efficiency == pytest.approx(0.06, abs=0.01)
+    assert a8.device.load_balance > 0.95
+
+
+def test_sod2d_monotonic_degradation(scans):
+    s = scans["sod2d"]
+    ce = [s[n].host.communication_efficiency for n in (1, 2, 4, 8)]
+    oe = [s[n].device.orchestration_efficiency for n in (1, 2, 4, 8)]
+    assert ce == sorted(ce, reverse=True)
+    assert oe == sorted(oe, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — FALL3D
+# ---------------------------------------------------------------------------
+def test_fall3d_table2(scans):
+    s = scans["fall3d"]
+    a1, a8 = s[1], s[8]
+    # n=1 column (paper: LB .52, DOE .59, dev CE .78, Orch .19)
+    assert a1.host.load_balance == pytest.approx(0.52, abs=0.04)
+    assert a1.host.device_offload_efficiency == pytest.approx(0.59, abs=0.05)
+    assert a1.device.communication_efficiency == pytest.approx(0.78, abs=0.02)
+    assert a1.device.orchestration_efficiency == pytest.approx(0.19, abs=0.04)
+    # scaling: load balance collapses (init does not scale), orch → ~0.04
+    assert a8.host.load_balance == pytest.approx(0.12, abs=0.04)
+    assert a8.device.orchestration_efficiency == pytest.approx(0.04, abs=0.02)
+    # device LB stays high throughout (paper: .96-.98)
+    for n in (1, 2, 4, 8):
+        assert s[n].device.load_balance > 0.95
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — XSHELLS
+# ---------------------------------------------------------------------------
+def test_xshells_table3(scans):
+    s = scans["xshells"]
+    a1, a8 = s[1], s[8]
+    # n=1 (paper: DOE .40, dev CE .98, LB 1.0, Orch .54)
+    assert a1.host.device_offload_efficiency == pytest.approx(0.40, abs=0.03)
+    assert a1.device.communication_efficiency == pytest.approx(0.98, abs=0.01)
+    assert a1.device.load_balance == pytest.approx(1.0, abs=0.01)
+    assert a1.device.orchestration_efficiency == pytest.approx(0.54, abs=0.05)
+    # paper trends: host CE drops hard; DOE *rises*; orchestration falls
+    assert a8.host.communication_efficiency < 0.65
+    assert a8.host.device_offload_efficiency > a1.host.device_offload_efficiency
+    assert a8.device.orchestration_efficiency < 0.35
+    # load balance stays ~1.0 at every scale (paper: 0.93-1.0)
+    for n in (1, 2, 4, 8):
+        assert s[n].host.load_balance > 0.93
+
+
+def test_all_scans_multiplicative(scans):
+    for scan in scans.values():
+        for a in scan.values():
+            a.validate(tol=1e-6)

@@ -1,0 +1,139 @@
+"""Unit + property tests for the interval algebra (paper §4.2 post-processing)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import intervals as iv
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+@st.composite
+def interval_sets(draw, max_n=30, t_max=100.0):
+    n = draw(st.integers(0, max_n))
+    pairs = []
+    for _ in range(n):
+        a = draw(st.floats(0, t_max, allow_nan=False, allow_infinity=False))
+        b = draw(st.floats(0, t_max, allow_nan=False, allow_infinity=False))
+        lo, hi = min(a, b), max(a, b)
+        pairs.append((lo, hi))
+    return iv.as_intervals(pairs) if pairs else iv.EMPTY.copy()
+
+
+# ---------------------------------------------------------------------------
+# unit tests
+# ---------------------------------------------------------------------------
+def test_flatten_merges_overlaps():
+    out = iv.flatten([(0, 2), (1, 3), (5, 6)])
+    np.testing.assert_allclose(out, [[0, 3], [5, 6]])
+
+
+def test_flatten_merges_touching():
+    out = iv.flatten([(0, 1), (1, 2)])
+    np.testing.assert_allclose(out, [[0, 2]])
+
+
+def test_flatten_drops_empty():
+    out = iv.flatten([(1, 1), (2, 2)])
+    assert len(out) == 0
+
+
+def test_flatten_streams_example():
+    # paper: overlapping launches across streams merge into one interval
+    stream0 = [(0.0, 1.0), (2.0, 3.0)]
+    stream1 = [(0.5, 2.5)]
+    out = iv.flatten(stream0 + stream1)
+    np.testing.assert_allclose(out, [[0.0, 3.0]])
+
+
+def test_subtract_removes_overlap():
+    mem = [(0, 4)]
+    kern = [(1, 2), (3, 5)]
+    out = iv.subtract(mem, kern)
+    np.testing.assert_allclose(out, [[0, 1], [2, 3]])
+
+
+def test_subtract_noop_when_disjoint():
+    out = iv.subtract([(0, 1)], [(2, 3)])
+    np.testing.assert_allclose(out, [[0, 1]])
+
+
+def test_gaps_classifies_idle():
+    busy = [(1, 2), (3, 4)]
+    out = iv.gaps(busy, 0, 5)
+    np.testing.assert_allclose(out, [[0, 1], [2, 3], [4, 5]])
+
+
+def test_intersect():
+    out = iv.intersect([(0, 3)], [(1, 2), (2.5, 4)])
+    np.testing.assert_allclose(out, [[1, 2], [2.5, 3]])
+
+
+def test_union():
+    out = iv.union([(0, 1)], [(0.5, 2)])
+    np.testing.assert_allclose(out, [[0, 2]])
+
+
+def test_clip():
+    out = iv.clip([(0, 10)], 2, 3)
+    np.testing.assert_allclose(out, [[2, 3]])
+
+
+def test_invalid_interval_raises():
+    with pytest.raises(ValueError):
+        iv.as_intervals([(2, 1)])
+
+
+def test_total_ignores_double_count():
+    assert iv.total([(0, 2), (1, 3)]) == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# property tests (system invariants)
+# ---------------------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(interval_sets())
+def test_flatten_idempotent(a):
+    once = iv.flatten(a)
+    twice = iv.flatten(once)
+    np.testing.assert_allclose(once, twice)
+    assert iv.is_flat(once)
+
+
+@settings(max_examples=200, deadline=None)
+@given(interval_sets(), interval_sets())
+def test_subtract_intersect_partition(a, b):
+    """subtract(a,b) and intersect(a,b) partition flatten(a)."""
+    sub = iv.total(iv.subtract(a, b))
+    inter = iv.total(iv.intersect(a, b))
+    assert sub + inter == pytest.approx(iv.total(a), abs=1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(interval_sets(), interval_sets())
+def test_union_inclusion_exclusion(a, b):
+    u = iv.total(iv.union(a, b))
+    inter = iv.total(iv.intersect(a, b))
+    assert u == pytest.approx(iv.total(a) + iv.total(b) - inter, abs=1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(interval_sets())
+def test_gaps_complement(a):
+    """busy + idle == window span (the device three-state partition)."""
+    lo, hi = 0.0, 150.0
+    clipped = iv.clip(a, lo, hi)
+    idle = iv.gaps(clipped, lo, hi)
+    assert iv.total(clipped) + iv.total(idle) == pytest.approx(hi - lo, abs=1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(interval_sets(), interval_sets())
+def test_kernel_memory_disjoint_after_postprocess(kern, mem):
+    """paper pipeline: memory-after-subtract never overlaps kernels."""
+    k = iv.flatten(kern)
+    m = iv.subtract(mem, k)
+    assert iv.total(iv.intersect(k, m)) == pytest.approx(0.0, abs=1e-12)

@@ -1,0 +1,164 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, executed with interpret=True (kernel bodies run on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_reference, ssd_sequential
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_SWEEP = [
+    # (B, S, T, H, K, D, window, softcap, dtype)
+    (1, 128, 128, 4, 4, 64, None, None, jnp.float32),     # MHA
+    (2, 256, 256, 4, 2, 64, None, None, jnp.float32),     # GQA 2:1
+    (1, 256, 256, 8, 2, 32, None, None, jnp.float32),     # GQA 4:1
+    (1, 256, 256, 4, 1, 64, None, None, jnp.float32),     # MQA
+    (1, 256, 256, 4, 2, 64, 64, None, jnp.float32),       # sliding window
+    (1, 256, 256, 4, 2, 64, None, 50.0, jnp.float32),     # softcap (gemma2)
+    (1, 256, 256, 4, 2, 64, 128, 30.0, jnp.float32),      # window+softcap
+    (1, 384, 384, 2, 2, 128, None, None, jnp.float32),    # D=128, S%block!=pow2
+    (2, 128, 128, 4, 2, 64, None, None, jnp.bfloat16),    # bf16
+    (1, 256, 256, 4, 2, 64, 64, 50.0, jnp.bfloat16),      # bf16 + features
+]
+
+
+@pytest.mark.parametrize(
+    "b,s,t,h,k,d,window,softcap,dtype", ATTN_SWEEP,
+    ids=[f"attn{i}" for i in range(len(ATTN_SWEEP))],
+)
+def test_flash_attention_vs_ref(b, s, t, h, k, d, window, softcap, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(keys[0], (b, s, h, d)).astype(dtype)
+    kk = jax.random.normal(keys[1], (b, t, k, d)).astype(dtype)
+    vv = jax.random.normal(keys[2], (b, t, k, d)).astype(dtype)
+    out = flash_attention(q, kk, vv, causal=True, window=window,
+                          softcap=softcap, interpret=True)
+    ref = attention_reference(q, kk, vv, causal=True, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_flash_attention_block_sizes():
+    """Block-shape sweep: result invariant to tiling choices."""
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (1, 512, 4, 64))
+    k = jax.random.normal(keys[1], (1, 512, 2, 64))
+    v = jax.random.normal(keys[2], (1, 512, 2, 64))
+    ref = attention_reference(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 256), (256, 128), (512, 512)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bk,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"bq={bq} bk={bk}")
+
+
+def test_xla_path_matches_ref():
+    """The model's chunked-attention XLA path equals the oracle too."""
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (2, 256, 4, 64))
+    k = jax.random.normal(keys[1], (2, 256, 2, 64))
+    v = jax.random.normal(keys[2], (2, 256, 2, 64))
+    for window, cap in [(None, None), (64, None), (None, 50.0)]:
+        out = attention(q, k, v, window=window, softcap=cap, impl="xla",
+                        kv_chunk=64)
+        ref = attention_reference(q, k, v, causal=True, window=window,
+                                  softcap=cap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+SSD_SWEEP = [
+    # (B, L, H, P, G, N, chunk, dtype)
+    (1, 64, 2, 16, 1, 16, 16, jnp.float32),
+    (2, 128, 4, 16, 2, 32, 32, jnp.float32),
+    (1, 128, 4, 64, 1, 64, 64, jnp.float32),    # mamba2-like head dims
+    (1, 256, 8, 32, 1, 16, 128, jnp.float32),   # long chunk
+    (2, 128, 4, 16, 4, 32, 32, jnp.float32),    # G == H
+    (1, 128, 4, 16, 2, 32, 32, jnp.bfloat16),   # bf16
+]
+
+
+@pytest.mark.parametrize(
+    "b,l,h,p,g,n,chunk,dtype", SSD_SWEEP,
+    ids=[f"ssd{i}" for i in range(len(SSD_SWEEP))],
+)
+def test_ssd_pallas_vs_ref(b, l, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))).astype(jnp.float32)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, l, g, n)).astype(dtype)
+    cm = jax.random.normal(ks[4], (b, l, g, n)).astype(dtype)
+    d = jnp.full((h,), 0.5)
+    out = ssd_pallas(x, dt, a, bm, cm, chunk=chunk, d_skip=d, interpret=True)
+    ref = ssd_reference(x, dt, a, bm, cm, chunk=chunk, d_skip=d)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_ssd_chunked_ref_vs_sequential():
+    """The chunked oracle equals the token-by-token recurrence (and is
+    chunk-size invariant)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, l, h, p, g, n = 2, 96, 4, 8, 2, 16
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, l, g, n))
+    cm = jax.random.normal(ks[4], (b, l, g, n))
+    ref = ssd_sequential(x, dt, a, bm, cm)
+    for chunk in (16, 32, 48, 96):
+        out = ssd_reference(x, dt, a, bm, cm, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=5e-4, atol=5e-4,
+                                   err_msg=f"chunk={chunk}")
+    # non-divisible chunk takes the padded path
+    out = ssd_reference(x, dt, a, bm, cm, chunk=40)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_state_carry_across_calls():
+    """final state from one call seeds the next (prefill→decode contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, l, h, p, g, n = 1, 64, 2, 8, 1, 16
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, l, g, n))
+    cm = jax.random.normal(ks[4], (b, l, g, n))
+    full, s_full = ssd_reference(x, dt, a, bm, cm, chunk=16,
+                                 return_final_state=True)
+    half = l // 2
+    y1, s1 = ssd_reference(x[:, :half], dt[:, :half], a, bm[:, :half],
+                           cm[:, :half], chunk=16, return_final_state=True)
+    y2, s2 = ssd_reference(x[:, half:], dt[:, half:], a, bm[:, half:],
+                           cm[:, half:], chunk=16, initial_state=s1,
+                           return_final_state=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,176 @@
+"""Tests for POP (eqs. 1–5), host (eqs. 6–8) and device (eqs. 9–12) metrics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    analyze_trace,
+    device_metrics,
+    elapsed_time,
+    host_metrics,
+    pop_metrics,
+)
+from repro.core.backends import SyntheticTraceBuilder
+from repro.core.tree import device_tree, host_tree
+
+
+durations = st.lists(
+    st.floats(0.0, 1e3, allow_nan=False, allow_infinity=False),
+    min_size=1,
+    max_size=16,
+)
+
+
+# ---------------------------------------------------------------------------
+# POP MPI metrics (eqs. 1–5)
+# ---------------------------------------------------------------------------
+def test_elapsed_time_eq1():
+    assert elapsed_time([1, 2], [3, 1]) == pytest.approx(4.0)
+
+
+def test_pop_perfect():
+    m = pop_metrics([2.0, 2.0], [0.0, 0.0])
+    assert m.parallel_efficiency == pytest.approx(1.0)
+    assert m.load_balance == pytest.approx(1.0)
+    assert m.communication_efficiency == pytest.approx(1.0)
+
+
+def test_pop_imbalance():
+    # rank0 works 4s, rank1 works 2s then waits 2s in MPI
+    m = pop_metrics([4.0, 2.0], [0.0, 2.0])
+    assert m.elapsed == pytest.approx(4.0)
+    assert m.parallel_efficiency == pytest.approx(6 / 8)
+    assert m.load_balance == pytest.approx(6 / 8)
+    assert m.communication_efficiency == pytest.approx(1.0)
+    m.validate()
+
+
+def test_pop_communication_loss():
+    # both ranks compute 2s and spend 2s in MPI: pure comm loss
+    m = pop_metrics([2.0, 2.0], [2.0, 2.0])
+    assert m.parallel_efficiency == pytest.approx(0.5)
+    assert m.load_balance == pytest.approx(1.0)
+    assert m.communication_efficiency == pytest.approx(0.5)
+    m.validate()
+
+
+@settings(max_examples=200, deadline=None)
+@given(durations, durations)
+def test_pop_properties(u, nu):
+    n = min(len(u), len(nu))
+    u, nu = u[:n], nu[:n]
+    if sum(u) + sum(nu) <= 0 or max(ui + nui for ui, nui in zip(u, nu)) <= 0:
+        return
+    m = pop_metrics(u, nu)
+    assert 0.0 <= m.parallel_efficiency <= 1.0 + 1e-9
+    assert 0.0 <= m.load_balance <= 1.0 + 1e-9
+    assert 0.0 <= m.communication_efficiency <= 1.0 + 1e-9
+    m.validate(tol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Host hierarchy (eqs. 6–8)
+# ---------------------------------------------------------------------------
+def test_host_metrics_eqs_6_7_8():
+    # rank0: U=2, W=1, MPI=1 → total 4 ; rank1: U=1, W=2, MPI=1 → total 4
+    m = host_metrics([2.0, 1.0], [1.0, 2.0], [1.0, 1.0])
+    assert m.elapsed == pytest.approx(4.0)
+    assert m.parallel_efficiency == pytest.approx(3.0 / 8.0)      # eq 6
+    assert m.mpi_parallel_efficiency == pytest.approx(6.0 / 8.0)  # eq 7
+    assert m.device_offload_efficiency == pytest.approx(3.0 / 6.0)  # eq 8
+    m.validate()
+
+
+def test_host_offload_counts_as_useful_for_mpi_lb():
+    """Paper use case 3: no useful-time imbalance but offload imbalance
+    still shows as MPI-level load imbalance (intended semantics)."""
+    # equal useful, very different offload
+    m = host_metrics([1.0, 1.0], [8.0, 0.0], [0.0, 8.0])
+    assert m.load_balance == pytest.approx((9 + 1) / (2 * 9))
+    assert m.load_balance < 0.6  # imbalanced at MPI level
+
+
+@settings(max_examples=200, deadline=None)
+@given(durations, durations, durations)
+def test_host_multiplicative(u, w, mp):
+    n = min(len(u), len(w), len(mp))
+    u, w, mp = u[:n], w[:n], mp[:n]
+    if max(ui + wi + mi for ui, wi, mi in zip(u, w, mp)) <= 0:
+        return
+    if sum(ui + wi for ui, wi in zip(u, w)) <= 0:
+        return
+    m = host_metrics(u, w, mp)
+    m.validate(tol=1e-7)
+    host_tree(m).validate(tol=1e-6)
+    for v in (m.parallel_efficiency, m.mpi_parallel_efficiency,
+              m.load_balance, m.communication_efficiency,
+              m.device_offload_efficiency):
+        assert 0.0 <= v <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Device hierarchy (eqs. 9–12)
+# ---------------------------------------------------------------------------
+def test_device_metrics_eqs_9_12():
+    # dev0: K=4, M=1 ; dev1: K=2, M=2 ; E=6
+    m = device_metrics([4.0, 2.0], [1.0, 2.0], elapsed=6.0)
+    assert m.parallel_efficiency == pytest.approx(6.0 / 12.0)        # eq 9
+    assert m.load_balance == pytest.approx(6.0 / 8.0)                # eq 10
+    assert m.communication_efficiency == pytest.approx(4.0 / 5.0)    # eq 11
+    assert m.orchestration_efficiency == pytest.approx(5.0 / 6.0)    # eq 12
+    m.validate()
+
+
+def test_device_all_idle():
+    m = device_metrics([0.0, 0.0], [0.0, 0.0], elapsed=1.0)
+    assert m.parallel_efficiency == 0.0
+    assert m.orchestration_efficiency == 0.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(durations, durations, st.floats(1e-3, 1e4))
+def test_device_multiplicative(k, mem, extra):
+    n = min(len(k), len(mem))
+    k, mem = k[:n], mem[:n]
+    elapsed = max(ki + mi for ki, mi in zip(k, mem)) + extra
+    m = device_metrics(k, mem, elapsed)
+    m.validate(tol=1e-7)
+    device_tree(m).validate(tol=1e-6)
+    for v in (m.parallel_efficiency, m.load_balance,
+              m.communication_efficiency, m.orchestration_efficiency):
+        assert 0.0 <= v <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Trace → metrics, including the flattening pipeline
+# ---------------------------------------------------------------------------
+def test_analyze_trace_overlap_counts_as_computation():
+    """Overlapping kernel+memory streams: overlap must count as kernel."""
+    b = SyntheticTraceBuilder(nranks=1, ndevices=1)
+    b.rank(0).offload(4.0)
+    b.device_kernel(0, 0.0, 2.0, stream=0)   # [0, 2]
+    b.device_kernel(0, 1.0, 2.0, stream=1)   # [1, 3] overlaps: flatten to [0,3]
+    b.device_memory(0, 2.0, 2.0)             # [2, 4]: overlap [2,3] removed → 1s
+    tr = b.build()
+    res = analyze_trace(tr)
+    st = res.device_states[0]
+    assert st["kernel"] == pytest.approx(3.0)
+    assert st["memory"] == pytest.approx(1.0)
+    assert st["idle"] == pytest.approx(0.0)
+    assert res.device.orchestration_efficiency == pytest.approx(1.0)
+    res.validate()
+
+
+def test_analyze_trace_elapsed_eq1():
+    b = SyntheticTraceBuilder(nranks=2, ndevices=2)
+    b.rank(0).useful(3.0)
+    b.rank(1).useful(1.0)
+    b.barrier()
+    tr = b.build()
+    res = analyze_trace(tr)
+    assert res.elapsed == pytest.approx(3.0)
+    assert res.host.load_balance == pytest.approx(4.0 / 6.0)
+    assert res.host.communication_efficiency == pytest.approx(1.0)
+    res.validate()

@@ -1,0 +1,81 @@
+"""Beyond-paper extensions: POP scalability branch across runs, and the
+ASCII trace renderer (the paper's visual-validation workflow)."""
+
+import pytest
+
+from repro.appsim import node_scan
+from repro.core.analysis import analyze_trace
+from repro.core.backends import SyntheticTraceBuilder
+from repro.core.scalability import render_scalability, scalability_scan
+from repro.core.traceview import render_trace
+from repro.pils import use_case
+
+
+def _run(nranks, work, mpi):
+    b = SyntheticTraceBuilder(nranks=nranks, ndevices=nranks)
+    for r in range(nranks):
+        b.rank(r).useful(work).offload_kernel(work * 2)
+        if mpi:
+            b.rank(r).mpi(mpi)
+    return analyze_trace(b.build())
+
+
+def test_perfect_strong_scaling():
+    """Halving work per rank when doubling ranks → GE = 1, CS = 1/PE·GE."""
+    runs = [_run(2, 1.0, 0.0), _run(4, 0.5, 0.0), _run(8, 0.25, 0.0)]
+    pts = scalability_scan(runs, labels=["2", "4", "8"])
+    for p in pts:
+        p.validate()
+        assert p.global_efficiency == pytest.approx(1.0, abs=1e-6)
+    assert pts[2].speedup == pytest.approx(4.0, abs=1e-6)
+
+
+def test_degraded_scaling_shows_in_global_eff():
+    """Growing MPI time at scale degrades Global Efficiency via PE."""
+    runs = [_run(2, 1.0, 0.0), _run(4, 0.5, 0.2), _run(8, 0.25, 0.3)]
+    pts = scalability_scan(runs, labels=["2", "4", "8"])
+    ges = [p.global_efficiency for p in pts]
+    assert ges[0] == pytest.approx(1.0)
+    assert ges[1] < 1.0 and ges[2] < ges[1]
+    for p in pts:
+        p.validate()
+    text = render_scalability(pts)
+    assert "GlobalEff" in text and "8" in text
+
+
+def test_scalability_on_appsim_scan():
+    """XSHELLS node scan: global efficiency decays monotonically."""
+    scan = node_scan("xshells")
+    pts = scalability_scan(
+        [scan[n] for n in (1, 2, 4, 8)],
+        labels=["1", "2", "4", "8"],
+        resources=[4, 8, 16, 32],
+    )
+    ges = [p.global_efficiency for p in pts]
+    assert all(ges[i] >= ges[i + 1] - 1e-9 for i in range(len(ges) - 1))
+    for p in pts:
+        p.validate(tol=1e-6)
+
+
+def test_render_trace_pils():
+    """The renderer shows the paper's trace structure: kernels on the
+    loaded device, memory segment on device 0 only (use case 6)."""
+    tr = use_case("uc6")["trace"]
+    art = render_trace(tr, width=60)
+    lines = art.splitlines()
+    assert len(lines) == 1 + 2 + 2   # header + 2 ranks + 2 devices
+    dev0 = next(l for l in lines if l.startswith("dev    0"))
+    dev1 = next(l for l in lines if l.startswith("dev    1"))
+    assert "=" in dev0      # the large transfer (green in the paper)
+    assert "=" not in dev1
+    assert "#" in dev0 and "#" in dev1
+    rank1 = next(l for l in lines if l.startswith("rank   1"))
+    assert "m" in rank1     # rank 1 waits in MPI (red in the paper)
+
+
+def test_render_trace_idle_classification():
+    b = SyntheticTraceBuilder(nranks=1, ndevices=1)
+    b.rank(0).useful(1.0).offload_kernel(1.0).useful(2.0)
+    art = render_trace(b.build(), width=40)
+    dev = next(l for l in art.splitlines() if l.startswith("dev"))
+    assert "." in dev and "#" in dev

@@ -1,0 +1,181 @@
+"""TalpMonitor behaviour: regions, state scopes, instrumentation, online
+sampling, runtime backend — with a fake clock for determinism plus one
+real-JAX smoke test."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DeviceActivity, HostState, TalpMonitor
+from repro.core.backends import RuntimeBackend
+from repro.core.report import render_tables, render_text, to_json, from_json
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def test_region_states_and_metrics():
+    clk = FakeClock()
+    mon = TalpMonitor("test", clock=clk)
+    with mon.region("step"):
+        clk.advance(2.0)                     # useful
+        with mon.offload():
+            clk.advance(1.0)
+        with mon.mpi():
+            clk.advance(1.0)
+    res = mon.finalize()
+    step = res["step"]
+    assert step.elapsed == pytest.approx(4.0)
+    st = step.host_states[0]
+    assert st["useful"] == pytest.approx(2.0)
+    assert st["offload"] == pytest.approx(1.0)
+    assert st["mpi"] == pytest.approx(1.0)
+    h = step.host
+    assert h.parallel_efficiency == pytest.approx(0.5)
+    assert h.device_offload_efficiency == pytest.approx(2.0 / 3.0)
+    h.validate()
+    # Global region charged too
+    g = res["Global"]
+    assert g.host_states[0]["offload"] == pytest.approx(1.0)
+
+
+def test_nested_regions_both_charged():
+    clk = FakeClock()
+    mon = TalpMonitor(clock=clk)
+    with mon.region("outer"):
+        with mon.region("inner"):
+            with mon.offload():
+                clk.advance(1.0)
+        clk.advance(1.0)
+    res = mon.finalize()
+    assert res["inner"].host_states[0]["offload"] == pytest.approx(1.0)
+    assert res["outer"].host_states[0]["offload"] == pytest.approx(1.0)
+    assert res["outer"].host_states[0]["useful"] == pytest.approx(1.0)
+    assert res["inner"].host_states[0]["useful"] == pytest.approx(0.0)
+
+
+def test_region_reopen_accumulates():
+    clk = FakeClock()
+    mon = TalpMonitor(clock=clk)
+    for _ in range(3):
+        with mon.region("iter"):
+            clk.advance(1.0)
+        clk.advance(0.5)  # outside region
+    res = mon.finalize()
+    assert res["iter"].elapsed == pytest.approx(3.0)
+    assert res["Global"].elapsed == pytest.approx(4.5)
+
+
+def test_region_close_mismatch_raises():
+    mon = TalpMonitor()
+    mon.open_region("a")
+    with pytest.raises(RuntimeError):
+        mon.close_region("b")
+
+
+def test_nested_state_raises():
+    mon = TalpMonitor()
+    with pytest.raises(RuntimeError):
+        with mon.offload():
+            with mon.mpi():
+                pass
+
+
+def test_device_records_clipped_to_region_windows():
+    clk = FakeClock()
+    mon = TalpMonitor(clock=clk)
+    with mon.region("r"):
+        with mon.offload():
+            clk.advance(2.0)
+    # kernel half inside the region window [0, 2]
+    mon.add_device_record(0, DeviceActivity.KERNEL, 1.0, 3.0)
+    clk.advance(1.0)
+    res = mon.finalize()
+    r = res["r"]
+    assert r.device_states[0]["kernel"] == pytest.approx(1.0)
+    assert r.device_states[0]["idle"] == pytest.approx(1.0)
+    assert res["Global"].device_states[0]["kernel"] == pytest.approx(2.0)
+
+
+def test_online_sample_mid_region():
+    clk = FakeClock()
+    mon = TalpMonitor(clock=clk)
+    mon.open_region("live")
+    clk.advance(1.0)
+    with mon.offload():
+        clk.advance(1.0)
+    snap = mon.sample("live")
+    assert snap.elapsed == pytest.approx(2.0)
+    assert snap.host.device_offload_efficiency == pytest.approx(0.5)
+    clk.advance(2.0)
+    snap2 = mon.sample("live")
+    assert snap2.elapsed == pytest.approx(4.0)
+    mon.close_region("live")
+
+
+def test_instrument_real_jax_smoke():
+    """End-to-end: wrap a jitted fn; offload + kernel record appear."""
+    mon = TalpMonitor("jax")
+    f = mon.instrument(jax.jit(lambda x: (x @ x).sum()), name="matmul")
+    x = jnp.ones((64, 64), dtype=jnp.float32)
+    with mon.region("compute"):
+        out = f(x)
+    assert jnp.isfinite(out)
+    res = mon.finalize()
+    r = res["compute"]
+    assert r.host_states[0]["offload"] > 0
+    assert r.device_states[0]["kernel"] > 0
+    assert r.host.device_offload_efficiency < 1.0
+    r.host.validate()
+    r.device.validate()
+
+
+def test_runtime_backend_async_overlap():
+    """Async launch: device record spans launch→ready while the host is
+    only charged for the blocked portion (paper use case 7 semantics)."""
+    be = RuntimeBackend()
+    mon = TalpMonitor("async", backend=be)
+    f = jax.jit(lambda x: jnp.tanh(x @ x).sum())
+    x = jnp.ones((256, 256))
+    with mon.region("step"):
+        h = be.launch(f, x, device=0, name="k")
+        # host "useful" python work while the device computes
+        acc = sum(i * i for i in range(10000))
+        with mon.offload():
+            be.wait(h)
+    assert acc > 0
+    res = mon.finalize()
+    r = res["step"]
+    assert r.device_states[0]["kernel"] > 0
+    # kernel window ⊇ blocked window → orchestration ≥ offload fraction
+    assert r.host_states[0]["useful"] > 0
+
+
+def test_report_text_and_json_roundtrip():
+    clk = FakeClock()
+    mon = TalpMonitor("rep", clock=clk)
+    with mon.region("r"):
+        clk.advance(1.0)
+        with mon.offload():
+            clk.advance(1.0)
+    mon.add_device_record(0, DeviceActivity.KERNEL, 1.0, 2.0)
+    res = mon.finalize()
+    text = render_tables(res)
+    assert "Parallel Efficiency" in text
+    assert "Device Offload Eff." in text
+    assert "Orchestration Eff." in text
+    j = from_json(to_json(res))
+    assert "regions" in j
+    r = j["regions"]["r"]
+    assert r["host_metrics"]["device_offload_efficiency"] == pytest.approx(0.5)
+    assert r["device_states"]["0"]["kernel"] == pytest.approx(1.0)
+    # single-region render
+    assert "rank" in render_text(res["r"])
