@@ -1,0 +1,104 @@
+"""Interval-engine micro-benchmark: vectorized ``subtract``/``intersect``
+vs the scalar loop references, on 10^6 random intervals.
+
+Prints ``name,us_per_call,derived`` CSV rows (same convention as run.py)
+and verifies that the vectorized outputs are *identical* (bit-for-bit) to
+the loop outputs before timing. Exits non-zero if the speedup target is
+missed, so CI can gate on it.
+
+Usage:
+  PYTHONPATH=src python benchmarks/intervals_bench.py [--n 1000000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import intervals as iv
+
+
+def _bench(fn, n_iter: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    return (time.perf_counter() - t0) / n_iter * 1e6  # us
+
+
+def _row(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def random_flat(n: int, rng: np.random.Generator, t_max: float) -> np.ndarray:
+    starts = np.sort(rng.uniform(0, t_max, n))
+    ends = starts + rng.uniform(0, 0.4 * t_max / n * 2, n)
+    return iv.flatten(np.stack([starts, ends], axis=1))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000,
+                    help="random intervals per operand")
+    ap.add_argument("--target-speedup", type=float, default=10.0)
+    ap.add_argument("--loop-iters", type=int, default=1,
+                    help="timing iterations for the slow loop reference")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    t_max = float(args.n)
+    a = random_flat(args.n, rng, t_max)
+    b = random_flat(args.n, rng, t_max)
+    _row("intervals_operands", 0.0, f"|a|={len(a)} |b|={len(b)} flat")
+
+    ok = True
+    for name, vec, loop in (
+        ("subtract", iv.subtract, iv._subtract_loop),
+        ("intersect", iv.intersect, iv._intersect_loop),
+    ):
+        out_vec = vec(a, b)
+        out_loop = loop(a, b)
+        identical = out_vec.shape == out_loop.shape and bool(
+            np.array_equal(out_vec, out_loop)
+        )
+        us_vec = _bench(lambda: vec(a, b))
+        us_loop = _bench(lambda: loop(a, b), n_iter=args.loop_iters)
+        speedup = us_loop / us_vec
+        _row(f"{name}_vectorized_1e6", us_vec,
+             f"speedup={speedup:.1f}x identical={identical} out={len(out_vec)}")
+        _row(f"{name}_loop_1e6", us_loop, "scalar reference")
+        ok = ok and identical and speedup >= args.target_speedup
+
+    # streaming flatten: one million records through a chunked timeline
+    from repro.core.states import DeviceActivity, DeviceTimeline
+
+    starts = rng.uniform(0, t_max, args.n)
+    durs = rng.uniform(0, 0.1, args.n)
+    kinds = rng.random(args.n) < 0.7
+
+    def stream():
+        tl = DeviceTimeline(compact_threshold=65536)
+        tl.ingest(
+            (DeviceActivity.KERNEL if k else DeviceActivity.MEMORY, s, s + d)
+            for k, s, d in zip(kinds, starts, durs)
+        )
+        return tl.occupancy()
+
+    us = _bench(stream, n_iter=1, warmup=0)
+    _row("timeline_stream_1e6", us, f"{args.n / (us / 1e6) / 1e6:.2f}M rec/s")
+
+    if not ok:
+        print(f"FAIL: speedup < {args.target_speedup}x or outputs differ",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Multi-rank merge micro-benchmark: cost of central aggregation as the
+job scales in ranks, plus the file-spool transport round trip.
+
+Prints ``name,us_per_call,derived`` CSV rows (same convention as run.py).
+
+Usage:
+  PYTHONPATH=src python benchmarks/merge_bench.py [--ranks 64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+from repro.core import DeviceActivity, TalpMonitor
+from repro.core.merge import FileSpoolTransport, merge_results
+
+
+def _bench(fn, n_iter: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    return (time.perf_counter() - t0) / n_iter * 1e6  # us
+
+
+def _row(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def simulate_rank(rank: int, n_regions: int = 8) -> object:
+    """One synthetic rank result with several regions + device records."""
+    clk = _Clock()
+    mon = TalpMonitor(f"rank{rank}", rank=rank, clock=clk)
+    for i in range(n_regions):
+        with mon.region(f"region{i}"):
+            clk.advance(1.0 + 0.1 * ((rank + i) % 5))
+            with mon.offload():
+                clk.advance(0.5)
+    t = 0.0
+    for i in range(64):  # 64 activity records per rank
+        mon.add_device_record(0, DeviceActivity.KERNEL, t, t + 0.05)
+        mon.add_device_record(0, DeviceActivity.MEMORY, t + 0.05, t + 0.06)
+        t += 0.1
+    return mon.finalize()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ranks", type=int, default=64)
+    args = ap.parse_args()
+
+    for n in (4, 16, args.ranks):
+        results = [simulate_rank(r) for r in range(n)]
+        us = _bench(lambda: merge_results(results, name="job"))
+        job = merge_results(results, name="job")
+        pe = job["region0"].host.parallel_efficiency
+        _row(f"merge_{n}_ranks", us, f"{n / (us / 1e6):.0f} ranks/s PE={pe:.3f}")
+        for region in job.regions.values():
+            if region.host:
+                region.host.validate()
+            if region.device:
+                region.device.validate()
+
+    # spool transport round trip (serialize + atomic publish + reload + merge)
+    results = [simulate_rank(r) for r in range(args.ranks)]
+    with tempfile.TemporaryDirectory() as d:
+        spool = FileSpoolTransport(d, world_size=args.ranks)
+
+        def roundtrip():
+            for r, res in enumerate(results):
+                spool.submit(res, rank=r)
+            return spool.merge(name="job")
+
+        us = _bench(roundtrip, n_iter=3)
+        _row(f"spool_roundtrip_{args.ranks}_ranks", us,
+             f"{args.ranks / (us / 1e6):.0f} ranks/s")
+    return 0
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    sys.exit(main())

@@ -25,6 +25,15 @@ from .states import (
     HostTimeline,
     Trace,
 )
+from .merge import (
+    AllGatherTransport,
+    FileSpoolTransport,
+    InProcessGather,
+    merge_region_results,
+    merge_results,
+    merge_spool,
+    talp_result_from_json,
+)
 from .talp import RegionResult, TalpMonitor, TalpResult
 from .tree import MetricNode, device_tree, host_tree
 
@@ -50,6 +59,13 @@ __all__ = [
     "RegionResult",
     "TalpMonitor",
     "TalpResult",
+    "AllGatherTransport",
+    "FileSpoolTransport",
+    "InProcessGather",
+    "merge_region_results",
+    "merge_results",
+    "merge_spool",
+    "talp_result_from_json",
     "MetricNode",
     "device_tree",
     "host_tree",

@@ -125,7 +125,7 @@ class SyntheticTraceBuilder:
         if window is None:
             t_host = max((c.t for c in self._cursors.values()), default=0.0)
             t_dev = max(
-                (r.end for tl in self.trace.devices.values() for r in tl.records),
+                (tl.span()[1] for tl in self.trace.devices.values()),
                 default=0.0,
             )
             window = (0.0, max(t_host, t_dev))

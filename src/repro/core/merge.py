@@ -1,0 +1,431 @@
+"""Multi-rank aggregation: merge per-rank TALP results into job-level ones.
+
+The paper computes its host/device efficiency hierarchies (eqs. 6–12)
+*across all ranks and devices of a job*. :class:`~repro.core.talp.TalpMonitor`
+measures one process; this module is the central-aggregation step that
+turns N per-rank :class:`TalpResult` payloads into the job-level report
+TALP prints (per-rank collection + cheap central merge — the architecture
+production job-monitoring systems use to scale).
+
+Merge semantics:
+
+  * **region-name union** — a region appears in the job report if any rank
+    measured it; ranks that never entered it contribute nothing to that
+    region's metrics (``n_ranks`` is per-region).
+  * **host states** — kept per rank, keyed by the monitor's rank id; rank
+    ids must be unique across the merged results.
+  * **devices** — each rank's devices are distinct physical accelerators,
+    so local device ids are remapped to dense job-global ids in
+    (result-order, local-id) order. The remap is deterministic, which
+    makes the merge associative: ``merge(merge(a, b), c) == merge(a, b, c)``.
+  * **elapsed** — paper eq. (1): the job window is the max over ranks.
+  * **metrics** — recomputed from the merged state durations (never
+    averaged from per-rank metrics), so ``validate()`` multiplicativity
+    holds exactly on the merged result.
+
+Three transports move the per-rank payloads to the merge point:
+
+  * :class:`InProcessGather` — ranks in one process (tests, simulated
+    multi-rank runs, threads).
+  * :class:`FileSpoolTransport` — each rank spools its JSON report
+    (``report.to_json``) to a shared directory; any process can merge the
+    spool post mortem. This is TALP's "machine-readable output enabling
+    automated processing" path, and works across nodes on a shared FS.
+  * :class:`AllGatherTransport` — a ``jax.distributed``-style collective:
+    with multiple initialized JAX processes the JSON payloads are
+    exchanged via ``process_allgather`` so every rank obtains the job
+    result; on a single process it degenerates to a local merge.
+
+Post-mortem CLI: ``python -m repro.core.merge <spool_dir>``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from .device_metrics import DeviceMetrics, device_metrics
+from .host_metrics import HostMetrics, host_metrics
+from .talp import RegionResult, TalpResult
+
+__all__ = [
+    "merge_region_results",
+    "merge_results",
+    "region_result_from_dict",
+    "talp_result_from_json",
+    "InProcessGather",
+    "FileSpoolTransport",
+    "AllGatherTransport",
+    "merge_spool",
+    "emit_job_report",
+]
+
+
+# ---------------------------------------------------------------------------
+# core merge
+# ---------------------------------------------------------------------------
+def _recompute_host(
+    host_states: Dict[int, Dict[str, float]], elapsed: float
+) -> Optional[HostMetrics]:
+    if not host_states or elapsed <= 0:
+        return None
+    ranks = sorted(host_states)
+    return host_metrics(
+        [host_states[r]["useful"] for r in ranks],
+        [host_states[r]["offload"] for r in ranks],
+        [host_states[r]["mpi"] for r in ranks],
+        elapsed=elapsed,
+    )
+
+
+def _recompute_device(
+    device_states: Dict[int, Dict[str, float]], elapsed: float
+) -> Optional[DeviceMetrics]:
+    if not device_states or elapsed <= 0:
+        return None
+    devs = sorted(device_states)
+    return device_metrics(
+        [device_states[d]["kernel"] for d in devs],
+        [device_states[d]["memory"] for d in devs],
+        elapsed,
+    )
+
+
+def merge_region_results(
+    parts: Sequence[RegionResult], name: Optional[str] = None
+) -> RegionResult:
+    """Merge the same region measured by N ranks into one job-level result."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge_region_results: empty input")
+    name = name or parts[0].name
+    elapsed = max(p.elapsed for p in parts)
+
+    host_states: Dict[int, Dict[str, float]] = {}
+    for p in parts:
+        for rank, st in p.host_states.items():
+            if rank in host_states:
+                raise ValueError(
+                    f"duplicate rank {rank} while merging region {name!r}; "
+                    "give each monitor a distinct rank id"
+                )
+            host_states[rank] = dict(st)
+
+    # Device-id remap: dense job-global ids in (part-order, local-id) order.
+    # Idle is re-anchored to the job window (E may grow under the merge).
+    device_states: Dict[int, Dict[str, float]] = {}
+    gid = 0
+    for p in parts:
+        for dev in sorted(p.device_states):
+            st = p.device_states[dev]
+            k, m = st["kernel"], st["memory"]
+            device_states[gid] = {
+                "kernel": k,
+                "memory": m,
+                "idle": max(0.0, elapsed - k - m),
+            }
+            gid += 1
+
+    return RegionResult(
+        name=name,
+        elapsed=elapsed,
+        n_ranks=len(host_states),
+        n_devices=len(device_states),
+        host=_recompute_host(host_states, elapsed),
+        device=_recompute_device(device_states, elapsed),
+        host_states=host_states,
+        device_states=device_states,
+    )
+
+
+def merge_results(
+    results: Sequence[TalpResult], name: Optional[str] = None
+) -> TalpResult:
+    """Merge N per-rank :class:`TalpResult` payloads into the job result."""
+    results = list(results)
+    if not results:
+        raise ValueError("merge_results: empty input")
+    region_names: List[str] = []
+    for r in results:
+        for rn in r.regions:
+            if rn not in region_names:
+                region_names.append(rn)
+    merged = {
+        rn: merge_region_results(
+            [r.regions[rn] for r in results if rn in r.regions], name=rn
+        )
+        for rn in region_names
+    }
+    return TalpResult(name=name or results[0].name, regions=merged)
+
+
+# ---------------------------------------------------------------------------
+# JSON reconstruction (the inverse of report.to_json, metrics recomputed)
+# ---------------------------------------------------------------------------
+def region_result_from_dict(d: Dict, name: Optional[str] = None) -> RegionResult:
+    """Rebuild a :class:`RegionResult` from its ``report.to_json`` dict.
+
+    Metrics are *recomputed* from the serialized state durations rather
+    than trusted from the payload, so a merged result is always internally
+    consistent (and ``validate()`` holds) even across producer versions.
+    """
+    name = name or d.get("name", "Global")
+    elapsed = float(d["elapsed"])
+    host_states = {
+        int(r): {k: float(v) for k, v in st.items()}
+        for r, st in (d.get("host_states") or {}).items()
+    }
+    device_states = {
+        int(dev): {k: float(v) for k, v in st.items()}
+        for dev, st in (d.get("device_states") or {}).items()
+    }
+    return RegionResult(
+        name=name,
+        elapsed=elapsed,
+        n_ranks=len(host_states),
+        n_devices=len(device_states),
+        host=_recompute_host(host_states, elapsed),
+        device=_recompute_device(device_states, elapsed),
+        host_states=host_states,
+        device_states=device_states,
+    )
+
+
+def talp_result_from_json(text: str) -> TalpResult:
+    """Rebuild a :class:`TalpResult` from ``report.to_json`` output."""
+    payload = json.loads(text)
+    if "regions" not in payload:
+        # single-region payload: wrap it
+        rr = region_result_from_dict(payload)
+        return TalpResult(name=rr.name, regions={rr.name: rr})
+    return TalpResult(
+        name=payload.get("talp", "talp"),
+        regions={
+            rn: region_result_from_dict(rd, name=rn)
+            for rn, rd in payload["regions"].items()
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+class InProcessGather:
+    """Collect per-rank results in one process and merge on demand."""
+
+    def __init__(self, world_size: Optional[int] = None):
+        self.world_size = world_size
+        self._results: Dict[int, TalpResult] = {}
+
+    def submit(self, result: TalpResult, rank: int) -> None:
+        if rank in self._results:
+            raise ValueError(f"rank {rank} already submitted")
+        self._results[rank] = result
+
+    def ready(self) -> bool:
+        if self.world_size is None:
+            return bool(self._results)
+        return len(self._results) >= self.world_size
+
+    def merge(self, name: Optional[str] = None) -> TalpResult:
+        if not self._results:
+            raise ValueError("no results submitted")
+        return merge_results(
+            [self._results[r] for r in sorted(self._results)], name=name
+        )
+
+
+class FileSpoolTransport:
+    """Per-rank JSON spool on a shared filesystem.
+
+    Each rank writes ``talp_rank<rank>.json`` (via ``report.to_json``);
+    the merge side lists the spool, reconstructs every per-rank result and
+    merges. Post-mortem by design: the spool is the job's machine-readable
+    artifact and can be re-merged at any time.
+
+    Use a fresh directory per job: leftover rank files from a previous
+    run in the same directory would merge into the new report. Files
+    whose rank id is outside ``[0, world_size)`` are rejected as stale;
+    same-shape leftovers are indistinguishable from live ranks and are
+    the caller's responsibility.
+    """
+
+    PREFIX = "talp_rank"
+
+    def __init__(self, spool_dir: str, world_size: Optional[int] = None):
+        self.spool_dir = spool_dir
+        self.world_size = world_size
+        os.makedirs(spool_dir, exist_ok=True)
+
+    def _path(self, rank: int) -> str:
+        return os.path.join(self.spool_dir, f"{self.PREFIX}{rank:05d}.json")
+
+    def submit(self, result: TalpResult, rank: int) -> str:
+        from .report import to_json
+
+        path = self._path(rank)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(to_json(result))
+        os.replace(tmp, path)  # atomic publish: mergers never see partial JSON
+        return path
+
+    def spooled_ranks(self) -> List[int]:
+        try:
+            names = os.listdir(self.spool_dir)
+        except FileNotFoundError:
+            return []
+        ranks = []
+        for n in names:
+            if n.startswith(self.PREFIX) and n.endswith(".json"):
+                try:
+                    ranks.append(int(n[len(self.PREFIX):-len(".json")]))
+                except ValueError:
+                    continue
+        return sorted(ranks)
+
+    def _check_stale(self, ranks: List[int]) -> None:
+        # A spool dir is one job's artifact. Leftovers from a larger
+        # previous run would silently merge into the new report; ranks
+        # outside [0, world_size) are detectable — reject them.
+        if self.world_size is not None and ranks and ranks[-1] >= self.world_size:
+            raise ValueError(
+                f"spool {self.spool_dir} contains rank {ranks[-1]} >= "
+                f"world_size {self.world_size}; stale files from a previous "
+                "job? use a fresh spool directory per job"
+            )
+
+    def ready(self) -> bool:
+        ranks = self.spooled_ranks()
+        self._check_stale(ranks)
+        if self.world_size is None:
+            return bool(ranks)
+        return len(ranks) >= self.world_size
+
+    def collect(self) -> List[TalpResult]:
+        ranks = self.spooled_ranks()
+        self._check_stale(ranks)
+        out = []
+        for rank in ranks:
+            with open(self._path(rank)) as f:
+                out.append(talp_result_from_json(f.read()))
+        return out
+
+    def merge(self, name: Optional[str] = None) -> TalpResult:
+        results = self.collect()
+        if not results:
+            raise ValueError(f"no spooled results in {self.spool_dir}")
+        return merge_results(results, name=name)
+
+
+class AllGatherTransport:
+    """``jax.distributed``-style collective exchange of result payloads.
+
+    With multiple initialized JAX processes, every rank contributes its
+    JSON payload through ``multihost_utils.process_allgather`` (padded
+    uint8 buffers, since collectives move arrays, not strings) and every
+    rank returns the merged job result. On a single process — or when JAX
+    distributed is unavailable — it degenerates to a local merge, so call
+    sites need no gating.
+    """
+
+    def __init__(self, max_bytes: int = 1 << 20):
+        self.max_bytes = max_bytes
+
+    def gather(self, result: TalpResult, name: Optional[str] = None) -> TalpResult:
+        from .report import to_json
+
+        try:
+            import jax
+
+            n_proc = jax.process_count()
+        except Exception:
+            n_proc = 1
+        if n_proc <= 1:
+            return merge_results([result], name=name)
+
+        import numpy as np
+        from jax.experimental import multihost_utils
+
+        payload = to_json(result).encode("utf-8")
+        if len(payload) > self.max_bytes - 8:
+            raise ValueError(
+                f"result payload {len(payload)}B exceeds allgather buffer "
+                f"{self.max_bytes}B; raise max_bytes"
+            )
+        buf = np.zeros(self.max_bytes, dtype=np.uint8)
+        buf[:8] = np.frombuffer(
+            len(payload).to_bytes(8, "little"), dtype=np.uint8
+        )
+        buf[8:8 + len(payload)] = np.frombuffer(payload, dtype=np.uint8)
+        gathered = np.asarray(multihost_utils.process_allgather(buf))
+        results = []
+        for row in gathered.reshape(n_proc, self.max_bytes):
+            size = int.from_bytes(row[:8].tobytes(), "little")
+            results.append(
+                talp_result_from_json(row[8:8 + size].tobytes().decode("utf-8"))
+            )
+        return merge_results(results, name=name)
+
+
+def merge_spool(spool_dir: str, name: Optional[str] = None) -> TalpResult:
+    """One-shot post-mortem merge of a rank spool directory."""
+    return FileSpoolTransport(spool_dir).merge(name=name)
+
+
+def emit_job_report(
+    result: TalpResult,
+    spool_dir: str,
+    rank: int,
+    world_size: int,
+    verbose: bool = True,
+) -> Optional[TalpResult]:
+    """Launcher-side helper: spool this rank's report; once all ranks are
+    in, merge and publish ``<spool_dir>/talp_job.json``.
+
+    Multiple ranks may pass ``ready()`` near-simultaneously; the merge is
+    idempotent and the job file is published atomically (tmp +
+    ``os.replace``), so concurrent writers are safe — readers only ever
+    see a complete report. Returns the job result on the rank(s) that
+    merged, ``None`` elsewhere.
+    """
+    from .report import render_tables, to_json
+
+    transport = FileSpoolTransport(spool_dir, world_size=world_size)
+    transport.submit(result, rank=rank)
+    if not transport.ready():
+        return None
+    job = transport.merge(name=result.name)
+    path = os.path.join(spool_dir, "talp_job.json")
+    tmp = f"{path}.tmp.{rank}"
+    with open(tmp, "w") as f:
+        f.write(to_json(job))
+    os.replace(tmp, path)
+    if verbose:
+        print(render_tables(job))
+    return job
+
+
+def main() -> None:
+    import argparse
+
+    from .report import render_tables, to_json
+
+    ap = argparse.ArgumentParser(
+        description="Merge a per-rank TALP spool into the job-level report."
+    )
+    ap.add_argument("spool_dir", help="directory of talp_rank*.json files")
+    ap.add_argument("--name", default=None, help="job name for the report")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the merged report as JSON")
+    args = ap.parse_args()
+    job = merge_spool(args.spool_dir, name=args.name)
+    print(render_tables(job))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            f.write(to_json(job))
+
+
+if __name__ == "__main__":
+    main()

@@ -111,48 +111,121 @@ class DeviceOccupancy:
 
 @dataclass
 class DeviceTimeline:
-    """Raw activity records for one device + the paper's post-processing.
+    """Activity records for one device + the paper's post-processing.
 
     The pipeline (§4.2, backend-independent):
       1. kernel records are flattened across streams,
       2. memory records are flattened, then kernel-overlapping segments
          are removed (overlap counts as computation),
       3. remaining uncovered window time is idle.
+
+    Ingestion is *streaming*: raw records accumulate in ``records`` until
+    ``compact_threshold`` is reached, then they are folded into per-kind
+    flattened interval arrays (``compact()``). A timeline therefore holds
+    at most ``compact_threshold`` raw records plus the (disjoint, hence
+    bounded by trace structure, not record count) compacted arrays — a
+    million activity records flatten in bounded memory. Compaction is
+    lossy w.r.t. per-record identity (stream ids, kernel names) but exact
+    w.r.t. the state occupancy the metrics are computed from.
     """
 
     device: int = 0
     records: List[DeviceRecord] = field(default_factory=list)
+    compact_threshold: int = 65536
+    _compact: Dict[DeviceActivity, np.ndarray] = field(
+        default_factory=dict, init=False, repr=False
+    )
+    _span: Optional[Tuple[float, float]] = field(default=None, init=False, repr=False)
+    _n_compacted: int = field(default=0, init=False, repr=False)
+
+    @property
+    def n_records(self) -> int:
+        """Total records ever ingested (pending + already compacted)."""
+        return self._n_compacted + len(self.records)
 
     def add(self, kind: DeviceActivity, start: float, end: float,
             stream: int = 0, name: str = "") -> None:
         self.records.append(DeviceRecord(kind, start, end, stream, name))
+        if len(self.records) >= self.compact_threshold:
+            self.compact()
 
     def extend(self, records: Iterable[DeviceRecord]) -> None:
-        self.records.extend(records)
+        self.ingest(records)
 
-    def _raw(self, kind: DeviceActivity) -> np.ndarray:
+    def ingest(self, records: Iterable, chunk_size: Optional[int] = None) -> int:
+        """Stream records (``DeviceRecord`` or ``(kind, start, end[, stream,
+        name])`` tuples) from any iterable, compacting every ``chunk_size``
+        records so arbitrarily long streams are ingested in bounded memory.
+        Returns the number of records ingested."""
+        chunk = chunk_size or self.compact_threshold
+        n = 0
+        for rec in records:
+            if not isinstance(rec, DeviceRecord):
+                rec = DeviceRecord(*rec)
+            self.records.append(rec)
+            n += 1
+            if len(self.records) >= chunk:
+                self.compact()
+        return n
+
+    def compact(self) -> None:
+        """Fold pending raw records into the per-kind flattened arrays."""
+        if not self.records:
+            return
+        lo = min(r.start for r in self.records)
+        hi = max(r.end for r in self.records)
+        self._span = (
+            (lo, hi) if self._span is None
+            else (min(self._span[0], lo), max(self._span[1], hi))
+        )
+        for kind in DeviceActivity:
+            pairs = [(r.start, r.end) for r in self.records if r.kind is kind]
+            if not pairs:
+                continue
+            parts = [iv.as_intervals(pairs)]
+            if kind in self._compact:
+                parts.append(self._compact[kind])
+            self._compact[kind] = iv.flatten(np.concatenate(parts, axis=0))
+        self._n_compacted += len(self.records)
+        self.records.clear()
+
+    def kind_intervals(self, kind: DeviceActivity) -> np.ndarray:
+        """Flattened intervals of one activity kind (compacted + pending)."""
         pairs = [(r.start, r.end) for r in self.records if r.kind is kind]
-        return iv.as_intervals(pairs) if pairs else iv.EMPTY.copy()
+        base = self._compact.get(kind)
+        if base is None:
+            return iv.flatten(iv.as_intervals(pairs)) if pairs else iv.EMPTY.copy()
+        if not pairs:
+            return base.copy()
+        return iv.flatten(np.concatenate([base, iv.as_intervals(pairs)], axis=0))
+
+    def span(self) -> Tuple[float, float]:
+        """(min start, max end) over every record ever ingested."""
+        lo, hi = self._span if self._span is not None else (np.inf, -np.inf)
+        for r in self.records:
+            lo = min(lo, r.start)
+            hi = max(hi, r.end)
+        if lo > hi:
+            return (0.0, 0.0)
+        return (lo, hi)
 
     def occupancy(self, window: Optional[Tuple[float, float]] = None) -> DeviceOccupancy:
-        kern = iv.flatten(self._raw(DeviceActivity.KERNEL))
-        mem = iv.subtract(iv.flatten(self._raw(DeviceActivity.MEMORY)), kern)
+        kern = self.kind_intervals(DeviceActivity.KERNEL)
+        mem = iv.subtract(self.kind_intervals(DeviceActivity.MEMORY), kern)
         if window is None:
-            lo = min((r.start for r in self.records), default=0.0)
-            hi = max((r.end for r in self.records), default=0.0)
-            window = (lo, hi)
+            window = self.span()
         kern_c = iv.clip(kern, *window)
         mem_c = iv.clip(mem, *window)
-        idle = iv.subtract(iv.gaps(iv.union(kern_c, mem_c), *window), iv.EMPTY)
+        idle = iv.gaps(iv.union(kern_c, mem_c), *window)
         return DeviceOccupancy(
             kernel=iv.total(kern_c), memory=iv.total(mem_c), idle=iv.total(idle)
         )
 
     def state_intervals(self, window: Tuple[float, float]) -> Dict[DeviceState, np.ndarray]:
         """Disjoint per-state intervals over a window (for trace rendering)."""
-        kern = iv.clip(iv.flatten(self._raw(DeviceActivity.KERNEL)), *window)
+        kern = iv.clip(self.kind_intervals(DeviceActivity.KERNEL), *window)
         mem = iv.clip(
-            iv.subtract(iv.flatten(self._raw(DeviceActivity.MEMORY)), kern), *window
+            iv.subtract(self.kind_intervals(DeviceActivity.MEMORY), kern), *window
         )
         idle = iv.gaps(iv.union(kern, mem), *window)
         return {DeviceState.KERNEL: kern, DeviceState.MEMORY: mem, DeviceState.IDLE: idle}

@@ -121,6 +121,14 @@ class TalpMonitor:
     # Region API (TALP user-level API analogue)
     # ------------------------------------------------------------------
     def open_region(self, name: str) -> None:
+        if self._state is not None:
+            # A state scope's duration is charged at scope exit to the
+            # regions on the stack at that moment; letting the stack
+            # change mid-scope would charge the region for time before it
+            # opened (or silently drop time for one closed mid-scope).
+            raise RuntimeError(
+                f"cannot open region {name!r} inside host state {self._state}"
+            )
         acc = self._acc.setdefault(name, _RegionAcc())
         if acc.open_since is not None:
             raise RuntimeError(f"region {name!r} already open")
@@ -128,6 +136,10 @@ class TalpMonitor:
         self._region_stack.append(name)
 
     def close_region(self, name: str) -> None:
+        if self._state is not None:
+            raise RuntimeError(
+                f"cannot close region {name!r} inside host state {self._state}"
+            )
         if not self._region_stack or self._region_stack[-1] != name:
             raise RuntimeError(
                 f"region close mismatch: {name!r} vs stack {self._region_stack}"
@@ -196,26 +208,55 @@ class TalpMonitor:
     def _flush_backend(self) -> None:
         if self.backend is not None and hasattr(self.backend, "flush"):
             for dev, rec in self.backend.flush():
-                self.device(dev).records.append(rec)
+                self.device(dev).extend((rec,))
 
     # ------------------------------------------------------------------
     # Transparent instrumentation
     # ------------------------------------------------------------------
     def instrument(self, fn: Callable, device: int = 0, name: str = "") -> Callable:
         """Wrap a (jitted) callable: host time blocked on it = Offload,
-        the execution window = a device Kernel record."""
-        import jax
+        the execution window = a device Kernel record.
 
+        When a backend with ``launch``/``wait`` is attached, dispatch is
+        routed through it so the device record comes from the backend's
+        activity buffer (launch→ready), decoupled from the host-blocked
+        window. Without a backend the kernel record is *synthesized* to
+        span exactly the host-blocked window — an approximation that by
+        construction pins Orchestration Efficiency (max(K+M)/E) to 1 over
+        that window, so device metrics from backend-less instrumentation
+        only carry information about idle gaps *between* calls.
+        """
         label = name or getattr(fn, "__name__", "fn")
+        backend = self.backend
+        if (backend is not None and hasattr(backend, "launch")
+                and hasattr(backend, "wait")):
 
-        def wrapped(*args, **kwargs):
-            t0 = self.clock()
-            with self.offload():
-                out = fn(*args, **kwargs)
-                out = jax.block_until_ready(out)
-            t1 = self.clock()
-            self.add_device_record(device, DeviceActivity.KERNEL, t0, t1, name=label)
-            return out
+            def wrapped(*args, **kwargs):
+                # The host is blocked for the whole wrapped call (dispatch,
+                # possible first-call compilation, and the wait), so all of
+                # it is Offload; the backend owns the device record timing.
+                # The closure keeps the caller's kwargs for fn separate
+                # from launch()'s own device/name/stream parameters.
+                with self.offload():
+                    handle = backend.launch(
+                        lambda: fn(*args, **kwargs), device=device, name=label
+                    )
+                    return backend.wait(handle)
+
+        else:
+
+            def wrapped(*args, **kwargs):
+                import jax
+
+                t0 = self.clock()
+                with self.offload():
+                    out = fn(*args, **kwargs)
+                    out = jax.block_until_ready(out)
+                t1 = self.clock()
+                self.add_device_record(
+                    device, DeviceActivity.KERNEL, t0, t1, name=label
+                )
+                return out
 
         wrapped.__name__ = f"talp_{label}"
         return wrapped
@@ -223,7 +264,23 @@ class TalpMonitor:
     # ------------------------------------------------------------------
     # Results
     # ------------------------------------------------------------------
-    def _region_result(self, name: str, now: Optional[float]) -> RegionResult:
+    def _device_flats(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Per-device flattened (kernel, memory-minus-kernel) intervals —
+        the region-independent part of the post-processing, computed once
+        per sample()/finalize() and shared across regions."""
+        flats: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for dev, tl in sorted(self.devices.items()):
+            kern = tl.kind_intervals(DeviceActivity.KERNEL)
+            mem = ivx.subtract(tl.kind_intervals(DeviceActivity.MEMORY), kern)
+            flats[dev] = (kern, mem)
+        return flats
+
+    def _region_result(
+        self,
+        name: str,
+        now: Optional[float],
+        device_flats: Optional[Dict[int, Tuple[np.ndarray, np.ndarray]]] = None,
+    ) -> RegionResult:
         acc = self._acc[name]
         elapsed = acc.elapsed(now)
         windows = acc.window_intervals(now)
@@ -236,20 +293,9 @@ class TalpMonitor:
         dev_states: Dict[int, Dict[str, float]] = {}
         kernels: List[float] = []
         memories: List[float] = []
-        for dev, tl in sorted(self.devices.items()):
-            kern = ivx.flatten(
-                ivx.as_intervals(
-                    [(r.start, r.end) for r in tl.records if r.kind is DeviceActivity.KERNEL]
-                )
-            )
-            mem = ivx.subtract(
-                ivx.flatten(
-                    ivx.as_intervals(
-                        [(r.start, r.end) for r in tl.records if r.kind is DeviceActivity.MEMORY]
-                    )
-                ),
-                kern,
-            )
+        if device_flats is None:
+            device_flats = self._device_flats()
+        for dev, (kern, mem) in sorted(device_flats.items()):
             k_in = ivx.total(ivx.intersect(kern, windows)) if len(windows) else 0.0
             m_in = ivx.total(ivx.intersect(mem, windows)) if len(windows) else 0.0
             idle = max(0.0, elapsed - k_in - m_in)
@@ -285,5 +331,9 @@ class TalpMonitor:
         self._flush_backend()
         if self.backend is not None and hasattr(self.backend, "stop"):
             self.backend.stop()
-        regions = {name: self._region_result(name, now=None) for name in self._acc}
+        flats = self._device_flats()
+        regions = {
+            name: self._region_result(name, now=None, device_flats=flats)
+            for name in self._acc
+        }
         return TalpResult(name=self.name, regions=regions)

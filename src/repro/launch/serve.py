@@ -24,6 +24,7 @@ import numpy as np
 
 from ..configs import get_config, list_configs, smoke_config
 from ..core.backends import RuntimeBackend
+from ..core.merge import emit_job_report
 from ..core.report import render_tables, to_json
 from ..core.talp import TalpMonitor
 from ..models import lm
@@ -40,9 +41,15 @@ def serve(
     seed: int = 0,
     talp_json: str = None,
     verbose: bool = True,
+    rank: int = 0,
+    world_size: int = 1,
+    talp_spool: str = None,
 ):
+    """Serve a batch of requests. Multi-rank serving fleets: pass
+    ``rank``/``world_size`` and a shared ``talp_spool`` dir to get one
+    job-level TALP report across all serving processes."""
     backend = RuntimeBackend()
-    mon = TalpMonitor("serve", backend=backend)
+    mon = TalpMonitor("serve", rank=rank, backend=backend)
     key = jax.random.PRNGKey(seed)
 
     with mon.region("init"):
@@ -94,6 +101,8 @@ def serve(
     if talp_json:
         with open(talp_json, "w") as f:
             f.write(to_json(result))
+    if talp_spool:
+        emit_job_report(result, talp_spool, rank, world_size, verbose=verbose)
     return np.stack(tokens_out, axis=1), result
 
 
@@ -105,11 +114,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--talp-json", default=None)
+    ap.add_argument("--talp-spool", default=None,
+                    help="shared dir for per-rank reports + job-level merge")
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--world-size", type=int, default=1)
     args = ap.parse_args()
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     t0 = time.time()
     tokens, _ = serve(cfg, args.requests, args.prompt_len, args.gen_len,
-                      talp_json=args.talp_json)
+                      talp_json=args.talp_json, rank=args.rank,
+                      world_size=args.world_size, talp_spool=args.talp_spool)
     dt = time.time() - t0
     n = tokens.size
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import sys
 import time
 
@@ -33,6 +32,7 @@ import numpy as np
 from ..checkpoint.manager import CheckpointManager
 from ..configs import get_config, list_configs, smoke_config
 from ..core.backends import RuntimeBackend
+from ..core.merge import emit_job_report
 from ..core.report import render_tables, to_json
 from ..core.talp import TalpMonitor
 from ..data.pipeline import DataConfig, SyntheticTokenPipeline
@@ -56,11 +56,20 @@ def train(
     fail_at_step: int = None,   # failure injection (tests)
     seed: int = 0,
     verbose: bool = True,
+    rank: int = 0,
+    world_size: int = 1,
+    talp_spool: str = None,
 ):
-    """Train a (usually reduced) config; returns (state, history, talp)."""
+    """Train a (usually reduced) config; returns (state, history, talp).
+
+    Multi-rank jobs: give each process its ``rank``/``world_size`` and a
+    shared ``talp_spool`` directory — every rank spools its per-process
+    TALP report there, and whichever rank completes the spool last merges
+    it into the job-level report (``talp_job.json``).
+    """
     opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10, total_steps=steps)
     backend = RuntimeBackend()
-    mon = TalpMonitor("train", backend=backend)
+    mon = TalpMonitor("train", rank=rank, backend=backend)
 
     data = SyntheticTokenPipeline(
         DataConfig(
@@ -70,8 +79,8 @@ def train(
             embed_dim=cfg.d_model if cfg.frontend == "embed" else 0,
             seed=seed,
         ),
-        process_index=0,
-        process_count=1,
+        process_index=rank,
+        process_count=world_size,
     )
 
     step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=0)
@@ -134,6 +143,8 @@ def train(
     if talp_json:
         with open(talp_json, "w") as f:
             f.write(to_json(result))
+    if talp_spool:
+        emit_job_report(result, talp_spool, rank, world_size, verbose=verbose)
     return state, history, result
 
 
@@ -149,6 +160,10 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--talp-interval", type=int, default=0)
     ap.add_argument("--talp-json", default=None)
+    ap.add_argument("--talp-spool", default=None,
+                    help="shared dir for per-rank reports + job-level merge")
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--world-size", type=int, default=1)
     ap.add_argument("--history-json", default=None)
     args = ap.parse_args()
 
@@ -162,6 +177,9 @@ def main():
         ckpt_every=args.ckpt_every,
         talp_interval=args.talp_interval,
         talp_json=args.talp_json,
+        rank=args.rank,
+        world_size=args.world_size,
+        talp_spool=args.talp_spool,
     )
     if args.history_json:
         with open(args.history_json, "w") as f:

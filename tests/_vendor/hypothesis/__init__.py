@@ -1,0 +1,111 @@
+"""Minimal, API-compatible fallback for the ``hypothesis`` property-testing
+library, used only when the real package is not installed (see
+``tests/conftest.py``).
+
+Implements the subset this repo's tests use:
+
+  * ``@given(*strategies)`` — runs the test for ``max_examples`` pseudo-random
+    draws (deterministic per test, seeded from the test name);
+  * ``@settings(max_examples=..., deadline=...)`` — composable above or below
+    ``@given``;
+  * ``hypothesis.strategies`` — ``integers``, ``floats``, ``lists``,
+    ``booleans``, ``sampled_from``, ``tuples``, ``just``, ``composite`` with
+    ``.map``/``.filter``.
+
+No shrinking, no database, no deadlines: on failure the falsifying example is
+printed and the original exception propagates.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import zlib
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+__version__ = "0.0.0+repro-fallback"
+
+
+class HealthCheck:
+    """Placeholder for ``hypothesis.HealthCheck`` (suppression is a no-op)."""
+
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class settings:
+    """Decorator carrying example-count configuration.
+
+    Works both above and below ``@given``: it simply attaches itself to
+    whatever callable it wraps; the ``given`` runner looks the attribute up
+    at call time.
+    """
+
+    default_max_examples = 100
+
+    def __init__(self, max_examples: int = None, deadline=None,
+                 suppress_health_check=(), derandomize: bool = False,
+                 print_blob: bool = False):
+        self.max_examples = (
+            self.default_max_examples if max_examples is None else max_examples
+        )
+        self.deadline = deadline  # accepted, ignored (no deadline enforcement)
+
+    def __call__(self, fn):
+        fn._hypothesis_settings = self
+        return fn
+
+
+class _HypothesisHandle:
+    def __init__(self, inner_test):
+        self.inner_test = inner_test
+
+
+def _resolve_settings(runner, inner):
+    return getattr(
+        runner, "_hypothesis_settings",
+        getattr(inner, "_hypothesis_settings", None),
+    ) or settings()
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the wrapped test for each of ``max_examples`` drawn inputs."""
+    for s in list(arg_strategies) + list(kw_strategies.values()):
+        if not isinstance(s, strategies.SearchStrategy):
+            raise TypeError(f"@given expects strategies, got {s!r}")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            cfg = _resolve_settings(runner, fn)
+            # Deterministic per-test stream so failures are reproducible.
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for example in range(cfg.max_examples):
+                drawn = [s.sample(rng) for s in arg_strategies]
+                drawn_kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception:
+                    print(
+                        f"Falsifying example ({fn.__qualname__}, "
+                        f"example {example}): args={drawn!r} kwargs={drawn_kw!r}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        # Keep name/doc but hide the inner signature: pytest must see
+        # (*args, **kwargs), not the drawn parameters, or it would try to
+        # resolve them as fixtures.
+        del runner.__wrapped__
+        # Parity with real hypothesis: plugins unwrap via `.hypothesis.inner_test`.
+        runner.hypothesis = _HypothesisHandle(fn)
+        return runner
+
+    return decorate

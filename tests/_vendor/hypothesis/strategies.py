@@ -1,0 +1,167 @@
+"""Strategy objects for the vendored ``hypothesis`` fallback.
+
+Each strategy wraps a ``sample(rng)`` function. Draws are biased toward
+boundary values (bounds, zero, small integers) so the cheap fallback still
+exercises the edge cases real hypothesis would find quickly.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Callable, List, Optional, Sequence
+
+__all__ = [
+    "SearchStrategy",
+    "integers",
+    "floats",
+    "lists",
+    "booleans",
+    "sampled_from",
+    "tuples",
+    "just",
+    "composite",
+]
+
+_EDGE_PROB = 0.15  # chance of drawing a boundary value instead of uniform
+
+
+class SearchStrategy:
+    def __init__(self, sampler: Callable[[random.Random], Any], label: str = ""):
+        self._sampler = sampler
+        self._label = label or "strategy"
+
+    def sample(self, rng: random.Random) -> Any:
+        return self._sampler(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self.sample(rng)),
+                              f"{self._label}.map")
+
+    def filter(self, pred: Callable[[Any], bool],
+               max_tries: int = 1000) -> "SearchStrategy":
+        def sampler(rng: random.Random):
+            for _ in range(max_tries):
+                v = self.sample(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError(f"filter on {self._label} rejected "
+                               f"{max_tries} consecutive draws")
+
+        return SearchStrategy(sampler, f"{self._label}.filter")
+
+    def __repr__(self) -> str:
+        return f"<{self._label}>"
+
+
+def integers(min_value: Optional[int] = None,
+             max_value: Optional[int] = None) -> SearchStrategy:
+    lo = -(2 ** 16) if min_value is None else int(min_value)
+    hi = 2 ** 16 if max_value is None else int(max_value)
+    if lo > hi:
+        raise ValueError(f"integers: min {lo} > max {hi}")
+    edges = sorted({lo, hi, *(v for v in (0, 1, -1) if lo <= v <= hi)})
+
+    def sampler(rng: random.Random) -> int:
+        if rng.random() < _EDGE_PROB:
+            return rng.choice(edges)
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(sampler, f"integers({lo}, {hi})")
+
+
+def floats(min_value: Optional[float] = None,
+           max_value: Optional[float] = None,
+           allow_nan: bool = True,
+           allow_infinity: bool = True,
+           allow_subnormal: bool = True,
+           width: int = 64) -> SearchStrategy:
+    bounded = min_value is not None and max_value is not None
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    if lo > hi:
+        raise ValueError(f"floats: min {lo} > max {hi}")
+    edges: List[float] = [lo, hi]
+    if lo <= 0.0 <= hi:
+        edges.append(0.0)
+    if lo <= 1.0 <= hi:
+        edges.append(1.0)
+    specials: List[float] = []
+    if not bounded:
+        if allow_nan:
+            specials.append(math.nan)
+        if allow_infinity:
+            specials.extend([math.inf, -math.inf])
+
+    def sampler(rng: random.Random) -> float:
+        r = rng.random()
+        if specials and r < 0.05:
+            return rng.choice(specials)
+        if r < _EDGE_PROB:
+            return rng.choice(edges)
+        if rng.random() < 0.2:
+            # small-magnitude values near the low edge: catches
+            # degenerate/zero-length interval and duration cases
+            return lo + (hi - lo) * (10.0 ** rng.uniform(-12, -1))
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(sampler, f"floats({lo}, {hi})")
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: Optional[int] = None,
+          unique: bool = False) -> SearchStrategy:
+    if max_size is None:
+        max_size = min_size + 10
+
+    def sampler(rng: random.Random) -> list:
+        n = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements.sample(rng) for _ in range(n)]
+        out: list = []
+        tries = 0
+        while len(out) < n and tries < 100 * (n + 1):
+            v = elements.sample(rng)
+            tries += 1
+            if v not in out:
+                out.append(v)
+        return out
+
+    return SearchStrategy(sampler, f"lists({elements!r})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    options = list(options)
+    if not options:
+        raise ValueError("sampled_from: empty sequence")
+    return SearchStrategy(lambda rng: rng.choice(options), "sampled_from")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.sample(rng) for s in strategies), "tuples"
+    )
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def composite(f: Callable) -> Callable[..., SearchStrategy]:
+    """``@st.composite``: first parameter of ``f`` becomes ``draw``."""
+
+    def builder(*args, **kwargs) -> SearchStrategy:
+        def sampler(rng: random.Random):
+            def draw(strategy: SearchStrategy):
+                return strategy.sample(rng)
+
+            return f(draw, *args, **kwargs)
+
+        return SearchStrategy(sampler, f"composite:{f.__name__}")
+
+    builder.__name__ = f.__name__
+    return builder

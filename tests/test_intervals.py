@@ -137,3 +137,43 @@ def test_kernel_memory_disjoint_after_postprocess(kern, mem):
     k = iv.flatten(kern)
     m = iv.subtract(mem, k)
     assert iv.total(iv.intersect(k, m)) == pytest.approx(0.0, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# vectorized engine ≡ scalar reference (bit-for-bit, not approximately:
+# both compute the same max/min of the same float64 inputs)
+# ---------------------------------------------------------------------------
+@settings(max_examples=200, deadline=None)
+@given(interval_sets(), interval_sets())
+def test_subtract_matches_loop_reference(a, b):
+    got = iv.subtract(a, b)
+    ref = iv._subtract_loop(a, b)
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=200, deadline=None)
+@given(interval_sets(), interval_sets())
+def test_intersect_matches_loop_reference(a, b):
+    got = iv.intersect(a, b)
+    ref = iv._intersect_loop(a, b)
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_vectorized_matches_loop_dense_random():
+    """Denser randomized sweep than the strategy above: many touching /
+    nested / duplicate boundary cases."""
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        n, m = rng.integers(0, 40, 2)
+
+        def mk(k):
+            # integer grid → frequent exact-touch and duplicate endpoints
+            s = rng.integers(0, 30, k).astype(np.float64)
+            d = rng.integers(0, 5, k).astype(np.float64)
+            return np.stack([s, s + d], axis=1) if k else iv.EMPTY.copy()
+
+        a, b = mk(n), mk(m)
+        np.testing.assert_array_equal(iv.subtract(a, b), iv._subtract_loop(a, b))
+        np.testing.assert_array_equal(iv.intersect(a, b), iv._intersect_loop(a, b))

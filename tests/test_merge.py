@@ -1,0 +1,301 @@
+"""Multi-rank aggregation (repro.core.merge): merge semantics, transports,
+and the job-level metric recomputation the paper's Tables 1–3 rely on."""
+
+import json
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AllGatherTransport,
+    DeviceActivity,
+    FileSpoolTransport,
+    InProcessGather,
+    TalpMonitor,
+    merge_results,
+    talp_result_from_json,
+)
+from repro.core.merge import merge_region_results, merge_spool
+from repro.core.report import to_json
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_rank_result(rank, useful, offload, mpi, kernel=0.0, memory=0.0,
+                     region="step"):
+    """One simulated rank: region [0, u+w+m], device records from t=0."""
+    clk = FakeClock()
+    mon = TalpMonitor(f"rank{rank}", rank=rank, clock=clk)
+    with mon.region(region):
+        clk.advance(useful)
+        if offload:
+            with mon.offload():
+                clk.advance(offload)
+        if mpi:
+            with mon.mpi():
+                clk.advance(mpi)
+    if kernel:
+        mon.add_device_record(0, DeviceActivity.KERNEL, 0.0, kernel)
+    if memory:
+        mon.add_device_record(0, DeviceActivity.MEMORY, kernel, kernel + memory)
+    return mon.finalize()
+
+
+# ---------------------------------------------------------------------------
+# hand-computed 4-rank fixture
+# ---------------------------------------------------------------------------
+def test_four_rank_fixture_hand_computed():
+    """u=[2,1,3,2] w=[1,2,1,1] mpi=[1,1,0,1] → E=4; K=[2,1,2,3]
+    M=[1,.5,0,0]. All job-level values below are worked by hand from
+    eqs. (6)–(12)."""
+    results = [
+        make_rank_result(0, 2.0, 1.0, 1.0, kernel=2.0, memory=1.0),
+        make_rank_result(1, 1.0, 2.0, 1.0, kernel=1.0, memory=0.5),
+        make_rank_result(2, 3.0, 1.0, 0.0, kernel=2.0),
+        make_rank_result(3, 2.0, 1.0, 1.0, kernel=3.0),
+    ]
+    job = merge_results(results, name="job")
+    step = job["step"]
+    assert step.n_ranks == 4
+    assert step.n_devices == 4
+    assert step.elapsed == pytest.approx(4.0)
+
+    h = step.host
+    assert h.parallel_efficiency == pytest.approx(8.0 / 16.0)        # eq 6
+    assert h.mpi_parallel_efficiency == pytest.approx(13.0 / 16.0)   # eq 7
+    assert h.device_offload_efficiency == pytest.approx(8.0 / 13.0)  # eq 8
+    assert h.load_balance == pytest.approx(13.0 / 16.0)
+    assert h.communication_efficiency == pytest.approx(1.0)
+    h.validate()
+
+    d = step.device
+    assert d.parallel_efficiency == pytest.approx(8.0 / 16.0)        # eq 9
+    assert d.load_balance == pytest.approx(8.0 / 12.0)               # eq 10
+    assert d.communication_efficiency == pytest.approx(1.0)          # eq 11
+    assert d.orchestration_efficiency == pytest.approx(3.0 / 4.0)    # eq 12
+    d.validate()
+
+    # PE = LB × CE × OE multiplicativity, explicitly
+    assert d.parallel_efficiency == pytest.approx(
+        d.load_balance * d.communication_efficiency * d.orchestration_efficiency
+    )
+    # device-id remap: one device per rank → dense global ids 0..3
+    assert sorted(step.device_states) == [0, 1, 2, 3]
+    assert step.device_states[3]["kernel"] == pytest.approx(3.0)
+    assert step.device_states[0]["idle"] == pytest.approx(1.0)
+
+
+def test_one_rank_merge_is_identity():
+    """A 1-rank merge must reproduce the single-monitor metrics
+    bit-for-bit (same floats, not approximately)."""
+    res = make_rank_result(0, 1.7, 0.9, 0.3, kernel=1.1, memory=0.4)
+    merged = merge_results([res])
+    for region in res.regions:
+        a, b = res[region], merged[region]
+        assert b.elapsed == a.elapsed
+        if a.host is None:
+            assert b.host is None
+        else:
+            assert b.host.as_dict() == a.host.as_dict()
+        if a.device is None:
+            assert b.device is None
+        else:
+            assert b.device.as_dict() == a.device.as_dict()
+        assert b.host_states == a.host_states
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+durations = st.floats(0.0, 100.0, allow_nan=False, allow_infinity=False)
+
+
+@st.composite
+def rank_params(draw):
+    u = draw(durations)
+    w = draw(durations)
+    m = draw(durations)
+    if u + w + m <= 0:
+        u = 1.0
+    k = draw(st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False)) * (u + w + m)
+    mem = draw(st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False)) * max(
+        0.0, u + w + m - k
+    )
+    return (u, w, m, k, mem)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(rank_params(), min_size=3, max_size=6))
+def test_merge_associative(params):
+    """merge(merge(a, b), rest) must equal merge(a, b, rest) exactly."""
+    results = [
+        make_rank_result(r, u, w, m, kernel=k, memory=mem)
+        for r, (u, w, m, k, mem) in enumerate(params)
+    ]
+    left = merge_results(
+        [merge_results(results[:2]), merge_results(results[2:])], name="job"
+    )
+    flat = merge_results(results, name="job")
+    assert json.loads(to_json(left)) == json.loads(to_json(flat))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(rank_params(), min_size=2, max_size=6))
+def test_merged_metrics_validate(params):
+    """Multiplicativity (PE = LB×CE×OE etc.) must hold on every merge."""
+    results = [
+        make_rank_result(r, u, w, m, kernel=k, memory=mem)
+        for r, (u, w, m, k, mem) in enumerate(params)
+    ]
+    job = merge_results(results)
+    for region in job.regions.values():
+        if region.host is not None:
+            region.host.validate(tol=1e-7)
+            for v in region.host.as_dict().values():
+                assert math.isfinite(v)
+        if region.device is not None:
+            region.device.validate(tol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# merge semantics details
+# ---------------------------------------------------------------------------
+def test_region_name_union():
+    a = make_rank_result(0, 1.0, 0.5, 0.0, region="solver")
+    b = make_rank_result(1, 2.0, 0.0, 0.5, region="io")
+    job = merge_results([a, b])
+    assert set(job.regions) == {"Global", "solver", "io"}
+    # a region measured by one rank has n_ranks=1 in the job report
+    assert job["solver"].n_ranks == 1
+    assert job["io"].n_ranks == 1
+    assert job["Global"].n_ranks == 2
+
+
+def test_duplicate_rank_rejected():
+    a = make_rank_result(0, 1.0, 0.0, 0.0)
+    b = make_rank_result(0, 2.0, 0.0, 0.0)
+    with pytest.raises(ValueError, match="duplicate rank"):
+        merge_results([a, b])
+
+
+def test_elapsed_is_max_over_ranks():
+    a = make_rank_result(0, 1.0, 0.0, 0.0)
+    b = make_rank_result(1, 5.0, 0.0, 0.0)
+    job = merge_results([a, b])
+    assert job["step"].elapsed == pytest.approx(5.0)
+    # rank 0's missing 4s show up as lost efficiency, not lost time
+    assert job["step"].host.parallel_efficiency == pytest.approx(6.0 / 10.0)
+
+
+def test_merge_empty_raises():
+    with pytest.raises(ValueError):
+        merge_results([])
+    with pytest.raises(ValueError):
+        merge_region_results([])
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+def _four_ranks():
+    return [
+        make_rank_result(r, 1.0 + r, 0.5, 0.25, kernel=0.5 + r * 0.3)
+        for r in range(4)
+    ]
+
+
+def test_in_process_gather():
+    results = _four_ranks()
+    g = InProcessGather(world_size=4)
+    for r, res in enumerate(results):
+        g.submit(res, rank=r)
+        assert g.ready() == (r == 3)
+    job = g.merge(name="job")
+    assert json.loads(to_json(job)) == json.loads(
+        to_json(merge_results(results, name="job"))
+    )
+    with pytest.raises(ValueError):
+        g.submit(results[0], rank=0)
+
+
+def test_file_spool_roundtrip(tmp_path):
+    results = _four_ranks()
+    spool = FileSpoolTransport(str(tmp_path), world_size=4)
+    assert not spool.ready()
+    for r, res in enumerate(results):
+        spool.submit(res, rank=r)
+    assert spool.ready()
+    assert spool.spooled_ranks() == [0, 1, 2, 3]
+    job = spool.merge(name="job")
+    ref = merge_results(results, name="job")
+    assert json.loads(to_json(job)) == json.loads(to_json(ref))
+    # one-shot helper
+    job2 = merge_spool(str(tmp_path), name="job")
+    assert json.loads(to_json(job2)) == json.loads(to_json(ref))
+    job2["step"].host.validate()
+    job2["step"].device.validate()
+
+
+def test_json_reconstruction_recomputes_metrics():
+    """Corrupt serialized metrics must not survive reconstruction: metrics
+    are recomputed from the state durations."""
+    res = make_rank_result(0, 2.0, 1.0, 1.0, kernel=1.5)
+    payload = json.loads(to_json(res))
+    payload["regions"]["step"]["host_metrics"]["parallel_efficiency"] = 123.0
+    rebuilt = talp_result_from_json(json.dumps(payload))
+    assert rebuilt["step"].host.parallel_efficiency == pytest.approx(0.5)
+    rebuilt["step"].host.validate()
+
+
+def test_file_spool_rejects_stale_larger_job(tmp_path):
+    """Leftover rank files from a previous, larger job must not silently
+    merge into a new smaller job's report."""
+    old = _four_ranks()
+    spool8 = FileSpoolTransport(str(tmp_path), world_size=8)
+    for r, res in enumerate(old):
+        spool8.submit(res, rank=r + 4)  # ranks 4..7 of the old 8-rank job
+    spool4 = FileSpoolTransport(str(tmp_path), world_size=4)
+    spool4.submit(make_rank_result(0, 1.0, 0.0, 0.0), rank=0)
+    with pytest.raises(ValueError, match="stale"):
+        spool4.ready()
+    with pytest.raises(ValueError, match="stale"):
+        spool4.merge()
+
+
+def test_emit_job_report(tmp_path):
+    """Launcher helper: None until all ranks spooled, then an atomic
+    talp_job.json plus the merged result on the completing rank."""
+    from repro.core.merge import emit_job_report
+
+    results = _four_ranks()
+    for r in range(3):
+        assert emit_job_report(results[r], str(tmp_path), r, 4,
+                               verbose=False) is None
+        assert not (tmp_path / "talp_job.json").exists()
+    job = emit_job_report(results[3], str(tmp_path), 3, 4, verbose=False)
+    assert job is not None
+    on_disk = json.loads((tmp_path / "talp_job.json").read_text())
+    assert on_disk == json.loads(to_json(job))
+    # no leftover tmp files from the atomic publish
+    assert not [p for p in tmp_path.iterdir() if ".tmp" in p.name]
+
+
+def test_allgather_transport_single_process_fallback():
+    """Without an initialized jax.distributed fleet the allgather
+    transport degenerates to a local merge."""
+    res = make_rank_result(0, 1.0, 0.5, 0.0, kernel=0.4)
+    job = AllGatherTransport().gather(res, name="job")
+    assert json.loads(to_json(job)) == json.loads(
+        to_json(merge_results([res], name="job"))
+    )

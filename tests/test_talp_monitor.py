@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import DeviceActivity, HostState, TalpMonitor
+from repro.core import DeviceActivity, DeviceRecord, HostState, TalpMonitor
 from repro.core.backends import RuntimeBackend
 from repro.core.report import render_tables, render_text, to_json, from_json
 
@@ -157,6 +157,139 @@ def test_runtime_backend_async_overlap():
     assert r.device_states[0]["kernel"] > 0
     # kernel window ⊇ blocked window → orchestration ≥ offload fraction
     assert r.host_states[0]["useful"] > 0
+
+
+def test_device_timeline_streaming_matches_one_shot():
+    """Chunked/streaming ingestion must reproduce one-shot occupancy while
+    keeping the pending-record buffer bounded."""
+    import numpy as np
+    from repro.core import DeviceTimeline
+
+    rng = np.random.default_rng(3)
+    n = 20_000
+    starts = rng.uniform(0, 100.0, n)
+    durs = rng.uniform(0, 0.05, n)
+    kinds = [DeviceActivity.KERNEL if k else DeviceActivity.MEMORY
+             for k in rng.random(n) < 0.6]
+
+    one_shot = DeviceTimeline(compact_threshold=10**9)
+    for kind, s, d in zip(kinds, starts, durs):
+        one_shot.add(kind, s, s + d)
+
+    streamed = DeviceTimeline(compact_threshold=512)
+    ingested = streamed.ingest(
+        (kind, s, s + d) for kind, s, d in zip(kinds, starts, durs)
+    )
+    assert ingested == n
+    assert streamed.n_records == n
+    assert len(streamed.records) < 512  # bounded pending buffer
+
+    o1, o2 = one_shot.occupancy(), streamed.occupancy()
+    assert o2.kernel == pytest.approx(o1.kernel, abs=1e-9)
+    assert o2.memory == pytest.approx(o1.memory, abs=1e-9)
+    assert o2.idle == pytest.approx(o1.idle, abs=1e-9)
+    assert streamed.span() == one_shot.span()
+
+
+def test_region_transition_inside_state_scope_raises():
+    """Regression: a state scope charges its full duration at exit to the
+    regions then on the stack, so opening/closing a region mid-scope
+    would misattribute (or drop) time — it must raise instead."""
+    clk = FakeClock()
+    mon = TalpMonitor(clock=clk)
+    mon.open_region("r")
+    with pytest.raises(RuntimeError, match="inside host state"):
+        with mon.offload():
+            mon.open_region("mid")
+    with pytest.raises(RuntimeError, match="inside host state"):
+        with mon.offload():
+            mon.close_region("r")
+    # the monitor stays usable afterwards
+    with mon.offload():
+        clk.advance(1.0)
+    mon.close_region("r")
+    res = mon.finalize()
+    assert res["r"].host_states[0]["offload"] == pytest.approx(1.0)
+
+
+class FakeAsyncBackend:
+    """Deterministic backend: the device record spans launch→ready, which
+    exceeds the host-blocked (wait) window — like a real async runtime."""
+
+    def __init__(self, clk, dispatch=3.0, blocked=2.0):
+        self.clk = clk
+        self.dispatch = dispatch
+        self.blocked = blocked
+        self._buf = []
+
+    def launch(self, fn, *args, device=0, name="", **kwargs):
+        t0 = self.clk()
+        out = fn(*args, **kwargs)
+        return (out, t0, device, name)
+
+    def wait(self, handle):
+        out, t0, device, name = handle
+        self.clk.advance(self.blocked)
+        self._buf.append(
+            (device, DeviceRecord(DeviceActivity.KERNEL, t0, self.clk(), name=name))
+        )
+        return out
+
+    def flush(self):
+        out, self._buf = self._buf, []
+        return out
+
+
+def test_instrument_prefers_backend_records():
+    """Regression: without a backend, instrument() synthesizes a kernel
+    record spanning exactly the host-blocked window, pinning
+    Orchestration Efficiency to 1. With a launch/wait backend attached,
+    the record must come from the backend (launch→ready) instead — wider
+    than the blocked window, and not duplicated by a synthetic record."""
+    clk = FakeClock()
+    be = FakeAsyncBackend(clk)
+    mon = TalpMonitor(clock=clk, backend=be)
+
+    def fake_kernel(x):
+        clk.advance(3.0)  # dispatch/compile work inside launch
+        return x
+
+    f = mon.instrument(fake_kernel, name="k")
+    with mon.region("r"):
+        clk.advance(1.0)  # useful
+        f(0)              # launch at t=1, ready at t=6, blocked [1, 6]
+    res = mon.finalize()
+    r = res["r"]
+    # exactly one kernel record, from the backend, spanning launch→ready
+    assert mon.devices[0].n_records == 1
+    assert r.device_states[0]["kernel"] == pytest.approx(5.0)
+    # the whole wrapped call (dispatch + wait) is host Offload
+    assert r.host_states[0]["offload"] == pytest.approx(5.0)
+    assert r.host_states[0]["useful"] == pytest.approx(1.0)
+    # OE is NOT forced to 1: the kernel window (5s) < elapsed (6s)
+    assert r.device.orchestration_efficiency == pytest.approx(5.0 / 6.0)
+    r.host.validate()
+    r.device.validate()
+
+
+def test_instrument_forwards_reserved_kwargs_to_fn():
+    """Regression: the backend path must pass the caller's kwargs to fn
+    untouched, even ones that collide with launch()'s own parameter names
+    (device/name/stream)."""
+    clk = FakeClock()
+    be = FakeAsyncBackend(clk)
+    mon = TalpMonitor(clock=clk, backend=be)
+    seen = {}
+
+    def fn(x, device=None, stream=None, name=None):
+        seen.update(device=device, stream=stream, name=name)
+        return x
+
+    wrapped = mon.instrument(fn, name="k")
+    with mon.region("r"):
+        out = wrapped(7, device="mine", stream="s0", name="n")
+    assert out == 7
+    assert seen == {"device": "mine", "stream": "s0", "name": "n"}
 
 
 def test_report_text_and_json_roundtrip():
