@@ -1,10 +1,15 @@
 """Multi-rank merge micro-benchmark: cost of central aggregation as the
-job scales in ranks, plus the file-spool transport round trip.
+job scales in ranks, the file-spool transport round trip, and the
+incremental-sampling speedup (cached flattened timelines vs re-flattening
+the whole record history on every ``sample()``).
 
 Prints ``name,us_per_call,derived`` CSV rows (same convention as run.py).
+Exits nonzero if the incremental sample path is slower than
+``--sample-target-speedup``× the non-incremental baseline.
 
 Usage:
-  PYTHONPATH=src python benchmarks/merge_bench.py [--ranks 64]
+  PYTHONPATH=src python benchmarks/merge_bench.py [--ranks 64] \
+      [--sample-records 100000] [--sample-target-speedup 5]
 """
 
 from __future__ import annotations
@@ -15,7 +20,7 @@ import tempfile
 import time
 
 from repro.core import DeviceActivity, TalpMonitor
-from repro.core.merge import FileSpoolTransport, merge_results
+from repro.core.merge import FileSpoolTransport, merge_results, merge_samples
 
 
 def _bench(fn, n_iter: int = 5, warmup: int = 1) -> float:
@@ -60,9 +65,63 @@ def simulate_rank(rank: int, n_regions: int = 8) -> object:
     return mon.finalize()
 
 
+def _sampled_monitor(n_records: int, incremental: bool) -> TalpMonitor:
+    """Monitor with an open region and a long device-record history —
+    the online-sampling scenario (records keep arriving, sample() is
+    called periodically)."""
+    clk = _Clock()
+    mon = TalpMonitor("sampled", clock=clk, incremental=incremental)
+    mon.open_region("loop")
+    t = 0.0
+    for i in range(n_records):
+        kind = DeviceActivity.KERNEL if i % 4 else DeviceActivity.MEMORY
+        # heavy overlap: flattened arrays stay small, so the cost under
+        # measurement is the per-sample record folding, not the metric math
+        mon.add_device_record(0, kind, t, t + 0.003)
+        t += 0.001
+    clk.advance(t + 1.0)
+    return mon
+
+
+def bench_incremental_sample(n_records: int, target_speedup: float) -> bool:
+    """sample() on an n_records timeline: incremental (cached flattened
+    timelines, fold only new records) vs full re-flatten baseline."""
+    base_mon = _sampled_monitor(n_records, incremental=False)
+    inc_mon = _sampled_monitor(n_records, incremental=True)
+
+    us_base = _bench(lambda: base_mon.sample("loop"), n_iter=3)
+    us_inc = _bench(lambda: inc_mon.sample("loop"), n_iter=3)
+    speedup = us_base / us_inc if us_inc > 0 else float("inf")
+    _row(f"sample_full_reflatten_{n_records}", us_base, "baseline")
+    _row(f"sample_incremental_{n_records}", us_inc,
+         f"{speedup:.1f}x vs baseline (target {target_speedup:.1f}x)")
+
+    # consistency: both paths must report identical metrics
+    b, i = base_mon.sample("loop"), inc_mon.sample("loop")
+    assert b.host.parallel_efficiency == i.host.parallel_efficiency
+    assert b.device.parallel_efficiency == i.device.parallel_efficiency
+
+    # informational: cost of a sample right after new records arrive
+    # (cache miss -> fold the pending chunk into the compacted arrays)
+    def arrival_sample():
+        mon = inc_mon
+        now = mon.clock()
+        for j in range(64):
+            mon.add_device_record(0, DeviceActivity.KERNEL,
+                                  now + j * 0.001, now + j * 0.001 + 0.003)
+        return mon.sample("loop")
+
+    us_arrival = _bench(arrival_sample, n_iter=3)
+    _row(f"sample_incremental_arrival_{n_records}", us_arrival,
+         "64 new records per sample")
+    return speedup >= target_speedup
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ranks", type=int, default=64)
+    ap.add_argument("--sample-records", type=int, default=100_000)
+    ap.add_argument("--sample-target-speedup", type=float, default=5.0)
     args = ap.parse_args()
 
     for n in (4, 16, args.ranks):
@@ -90,6 +149,24 @@ def main() -> int:
         us = _bench(roundtrip, n_iter=3)
         _row(f"spool_roundtrip_{args.ranks}_ranks", us,
              f"{args.ranks / (us / 1e6):.0f} ranks/s")
+
+        # mid-run snapshot path: overwrite-in-place + partial-rank merge
+        def sample_roundtrip():
+            for r, res in enumerate(results):
+                spool.submit_sample(res, rank=r)
+            return spool.merge_samples(name="job")
+
+        us = _bench(sample_roundtrip, n_iter=3)
+        _row(f"sample_spool_roundtrip_{args.ranks}_ranks", us,
+             f"{args.ranks / (us / 1e6):.0f} ranks/s")
+        # on finalized runs the snapshot merge agrees with the post-mortem one
+        assert (merge_samples(results, name="job")["region0"].host.as_dict()
+                == merge_results(results, name="job")["region0"].host.as_dict())
+
+    if not bench_incremental_sample(args.sample_records,
+                                    args.sample_target_speedup):
+        print("FAIL: incremental sample speedup below target", file=sys.stderr)
+        return 1
     return 0
 
 

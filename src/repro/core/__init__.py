@@ -3,8 +3,12 @@
 Public API:
   * interval algebra: :mod:`repro.core.intervals`
   * state model: :mod:`repro.core.states`
-  * metrics: :func:`pop_metrics`, :func:`host_metrics`, :func:`device_metrics`
-  * hierarchy: :mod:`repro.core.tree`
+  * metric engine: :mod:`repro.core.hierarchy` (``StateDurations``,
+    ``MetricSpec``, ``Hierarchy``, the ``POP``/``HOST``/``DEVICE``/
+    ``SCALABILITY`` instances)
+  * metrics façades: :func:`pop_metrics`, :func:`host_metrics`,
+    :func:`device_metrics`
+  * hierarchy trees: :mod:`repro.core.tree`
   * monitor: :class:`TalpMonitor`
   * analysis/report: :func:`analyze_trace`, :mod:`repro.core.report`
   * backends: synthetic / runtime / analytical plugins
@@ -13,6 +17,16 @@ Public API:
 from . import intervals
 from .analysis import TraceAnalysis, analyze_trace
 from .device_metrics import DeviceMetrics, device_metrics
+from .hierarchy import (
+    DEVICE,
+    HOST,
+    POP,
+    SCALABILITY,
+    Hierarchy,
+    MetricFrame,
+    MetricSpec,
+    StateDurations,
+)
 from .host_metrics import HostMetrics, host_metrics
 from .pop import PopMetrics, elapsed_time, pop_metrics
 from .states import (
@@ -31,11 +45,12 @@ from .merge import (
     InProcessGather,
     merge_region_results,
     merge_results,
+    merge_samples,
     merge_spool,
     talp_result_from_json,
 )
 from .talp import RegionResult, TalpMonitor, TalpResult
-from .tree import MetricNode, device_tree, host_tree
+from .tree import MetricNode, device_tree, host_tree, tree_from_frame
 
 __all__ = [
     "intervals",
@@ -48,6 +63,14 @@ __all__ = [
     "PopMetrics",
     "elapsed_time",
     "pop_metrics",
+    "StateDurations",
+    "MetricSpec",
+    "MetricFrame",
+    "Hierarchy",
+    "POP",
+    "HOST",
+    "DEVICE",
+    "SCALABILITY",
     "DeviceActivity",
     "DeviceOccupancy",
     "DeviceRecord",
@@ -64,9 +87,11 @@ __all__ = [
     "InProcessGather",
     "merge_region_results",
     "merge_results",
+    "merge_samples",
     "merge_spool",
     "talp_result_from_json",
     "MetricNode",
     "device_tree",
     "host_tree",
+    "tree_from_frame",
 ]

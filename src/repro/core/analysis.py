@@ -4,6 +4,9 @@
 the analytical backend, or merged from per-process JSON) carries the
 whole job. This module computes the paper's host and device hierarchies
 from a ``Trace`` — the aggregation step TALP performs at report time.
+All metric arithmetic is routed through the façades into the declarative
+engine (:data:`repro.core.hierarchy.HOST` / :data:`~.DEVICE`); no
+formula is restated here.
 """
 
 from __future__ import annotations

@@ -11,7 +11,10 @@ Memory operations (M), Idle. The Parallel Efficiency branch:
 with PE = LB × CE × OE (multiplicative). The second branch, Device
 Computational Efficiency, is the paper's *future work*; we implement it
 as a beyond-paper extension in :mod:`repro.core.backends.analytical`
-(useful-model-FLOPs vs peak over kernel time).
+(useful-model-FLOPs vs peak over kernel time) and feed it into the
+hierarchy as an optional annotation node. The formulas live in
+:data:`repro.core.hierarchy.DEVICE`; this module is the input-validating
+façade around them.
 """
 
 from __future__ import annotations
@@ -20,6 +23,8 @@ from dataclasses import dataclass
 from typing import Dict, Optional, Sequence
 
 import numpy as np
+
+from .hierarchy import DEVICE, MetricFrame, StateDurations
 
 __all__ = ["DeviceMetrics", "device_metrics"]
 
@@ -35,29 +40,18 @@ class DeviceMetrics:
     # beyond-paper (paper's future-work branch), optional:
     computational_efficiency: Optional[float] = None
 
+    @classmethod
+    def from_frame(cls, frame: MetricFrame) -> "DeviceMetrics":
+        return cls(**frame.scalar_fields())
+
+    def frame(self) -> MetricFrame:
+        return DEVICE.frame_of(self)
+
     def validate(self, tol: float = 1e-9) -> None:
-        prod = (
-            self.load_balance
-            * self.communication_efficiency
-            * self.orchestration_efficiency
-        )
-        if abs(prod - self.parallel_efficiency) > tol:
-            raise AssertionError(
-                f"PE_device {self.parallel_efficiency} != LB*CE*OE {prod}"
-            )
+        self.frame().validate(tol)
 
     def as_dict(self) -> Dict[str, float]:
-        d = {
-            "parallel_efficiency": self.parallel_efficiency,
-            "load_balance": self.load_balance,
-            "communication_efficiency": self.communication_efficiency,
-            "orchestration_efficiency": self.orchestration_efficiency,
-            "elapsed": self.elapsed,
-            "n_devices": self.n_devices,
-        }
-        if self.computational_efficiency is not None:
-            d["computational_efficiency"] = self.computational_efficiency
-        return d
+        return self.frame().as_dict()
 
 
 def device_metrics(
@@ -75,19 +69,10 @@ def device_metrics(
         raise ValueError("negative state duration")
     if elapsed <= 0:
         raise ValueError("elapsed must be positive")
-    m = len(k)
-    max_k = float(np.max(k))
-    max_km = float(np.max(k + mem))
-    pe = float(np.sum(k)) / (elapsed * m)                     # eq. (9)
-    lb = float(np.sum(k)) / (m * max_k) if max_k > 0 else 0.0  # eq. (10)
-    ce = max_k / max_km if max_km > 0 else 0.0                 # eq. (11)
-    oe = max_km / elapsed                                      # eq. (12)
-    return DeviceMetrics(
-        parallel_efficiency=pe,
-        load_balance=lb,
-        communication_efficiency=ce,
-        orchestration_efficiency=oe,
-        elapsed=float(elapsed),
-        n_devices=m,
-        computational_efficiency=computational_efficiency,
+    extras = (
+        {"computational_efficiency": computational_efficiency}
+        if computational_efficiency is not None
+        else {}
     )
+    sd = StateDurations(elapsed=float(elapsed), kernel=k, memory=mem, extras=extras)
+    return DeviceMetrics.from_frame(DEVICE.compute(sd))

@@ -13,7 +13,9 @@ treatment of states" (offload counts as useful):
   Load Balance           LB = Σ(U+W) / (n · max(U+W))
   Communication Eff.     CE = max(U+W) / E
 
-so MPI_PE = LB × CE, mirroring the original POP formulas.
+so MPI_PE = LB × CE, mirroring the original POP formulas. The formulas
+live in :data:`repro.core.hierarchy.HOST`; this module is the input-
+validating façade around them.
 """
 
 from __future__ import annotations
@@ -23,7 +25,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from .pop import elapsed_time
+from .hierarchy import HOST, MetricFrame, StateDurations, elapsed_time
 
 __all__ = ["HostMetrics", "host_metrics"]
 
@@ -38,24 +40,18 @@ class HostMetrics:
     elapsed: float
     n_processes: int
 
+    @classmethod
+    def from_frame(cls, frame: MetricFrame) -> "HostMetrics":
+        return cls(**frame.scalar_fields())
+
+    def frame(self) -> MetricFrame:
+        return HOST.frame_of(self)
+
     def validate(self, tol: float = 1e-9) -> None:
-        p1 = self.mpi_parallel_efficiency * self.device_offload_efficiency
-        if abs(p1 - self.parallel_efficiency) > tol:
-            raise AssertionError(f"PE_host {self.parallel_efficiency} != MPI_PE*OE {p1}")
-        p2 = self.load_balance * self.communication_efficiency
-        if abs(p2 - self.mpi_parallel_efficiency) > tol:
-            raise AssertionError(f"MPI_PE {self.mpi_parallel_efficiency} != LB*CE {p2}")
+        self.frame().validate(tol)
 
     def as_dict(self) -> Dict[str, float]:
-        return {
-            "parallel_efficiency": self.parallel_efficiency,
-            "mpi_parallel_efficiency": self.mpi_parallel_efficiency,
-            "communication_efficiency": self.communication_efficiency,
-            "load_balance": self.load_balance,
-            "device_offload_efficiency": self.device_offload_efficiency,
-            "elapsed": self.elapsed,
-            "n_processes": self.n_processes,
-        }
+        return self.frame().as_dict()
 
 
 def host_metrics(
@@ -74,7 +70,6 @@ def host_metrics(
         raise ValueError("useful/offload must be equal-length 1-D, non-empty")
     if np.any(u < 0) or np.any(w < 0):
         raise ValueError("negative state duration")
-    n = len(u)
     if elapsed is None:
         if mpi is None:
             raise ValueError("need mpi durations or explicit elapsed")
@@ -82,21 +77,5 @@ def host_metrics(
         elapsed = elapsed_time(u, w + m)
     if elapsed <= 0:
         raise ValueError("elapsed must be positive")
-    uw = u + w
-    sum_u = float(np.sum(u))
-    sum_uw = float(np.sum(uw))
-    max_uw = float(np.max(uw))
-    pe_host = sum_u / (elapsed * n)                              # eq. (6)
-    mpi_pe = sum_uw / (elapsed * n)                              # eq. (7)
-    oe = sum_u / sum_uw if sum_uw > 0 else 0.0                   # eq. (8)
-    lb = sum_uw / (n * max_uw) if max_uw > 0 else 0.0
-    ce = max_uw / elapsed
-    return HostMetrics(
-        parallel_efficiency=pe_host,
-        mpi_parallel_efficiency=mpi_pe,
-        communication_efficiency=ce,
-        load_balance=lb,
-        device_offload_efficiency=oe,
-        elapsed=float(elapsed),
-        n_processes=n,
-    )
+    sd = StateDurations(elapsed=float(elapsed), useful=u, offload=w, mpi=mpi)
+    return HostMetrics.from_frame(HOST.compute(sd))

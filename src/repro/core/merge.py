@@ -45,13 +45,15 @@ import json
 import os
 from typing import Dict, List, Optional, Sequence
 
-from .device_metrics import DeviceMetrics, device_metrics
-from .host_metrics import HostMetrics, host_metrics
+from .device_metrics import DeviceMetrics
+from .hierarchy import DEVICE, HOST, StateDurations
+from .host_metrics import HostMetrics
 from .talp import RegionResult, TalpResult
 
 __all__ = [
     "merge_region_results",
     "merge_results",
+    "merge_samples",
     "region_result_from_dict",
     "talp_result_from_json",
     "InProcessGather",
@@ -63,20 +65,15 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
-# core merge
+# core merge — metrics recomputed through the hierarchy engine
 # ---------------------------------------------------------------------------
 def _recompute_host(
     host_states: Dict[int, Dict[str, float]], elapsed: float
 ) -> Optional[HostMetrics]:
     if not host_states or elapsed <= 0:
         return None
-    ranks = sorted(host_states)
-    return host_metrics(
-        [host_states[r]["useful"] for r in ranks],
-        [host_states[r]["offload"] for r in ranks],
-        [host_states[r]["mpi"] for r in ranks],
-        elapsed=elapsed,
-    )
+    sd = StateDurations.from_states(host_states=host_states, elapsed=elapsed)
+    return HostMetrics.from_frame(HOST.compute(sd))
 
 
 def _recompute_device(
@@ -84,12 +81,8 @@ def _recompute_device(
 ) -> Optional[DeviceMetrics]:
     if not device_states or elapsed <= 0:
         return None
-    devs = sorted(device_states)
-    return device_metrics(
-        [device_states[d]["kernel"] for d in devs],
-        [device_states[d]["memory"] for d in devs],
-        elapsed,
-    )
+    sd = StateDurations.from_states(device_states=device_states, elapsed=elapsed)
+    return DeviceMetrics.from_frame(DEVICE.compute(sd))
 
 
 def merge_region_results(
@@ -158,6 +151,21 @@ def merge_results(
         for rn in region_names
     }
     return TalpResult(name=name or results[0].name, regions=merged)
+
+
+def merge_samples(
+    results: Sequence[TalpResult], name: Optional[str] = None
+) -> TalpResult:
+    """Merge mid-run snapshots (``TalpMonitor.sample_result()``) across
+    ranks into a job-level snapshot — TALP's online mode at job scope.
+
+    The algebra is identical to :func:`merge_results`: the snapshot
+    window is the max elapsed over ranks, so ranks caught at different
+    progress still merge into one internally consistent report
+    (``validate()`` holds). On finalized runs the result agrees exactly
+    with a post-mortem :func:`merge_results`.
+    """
+    return merge_results(results, name=name)
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +260,7 @@ class FileSpoolTransport:
     """
 
     PREFIX = "talp_rank"
+    SAMPLE_PREFIX = "talp_sample_rank"
 
     def __init__(self, spool_dir: str, world_size: Optional[int] = None):
         self.spool_dir = spool_dir
@@ -261,29 +270,48 @@ class FileSpoolTransport:
     def _path(self, rank: int) -> str:
         return os.path.join(self.spool_dir, f"{self.PREFIX}{rank:05d}.json")
 
-    def submit(self, result: TalpResult, rank: int) -> str:
+    def _sample_path(self, rank: int) -> str:
+        return os.path.join(self.spool_dir, f"{self.SAMPLE_PREFIX}{rank:05d}.json")
+
+    def _publish(self, result: TalpResult, path: str) -> str:
         from .report import to_json
 
-        path = self._path(rank)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             f.write(to_json(result))
         os.replace(tmp, path)  # atomic publish: mergers never see partial JSON
         return path
 
-    def spooled_ranks(self) -> List[int]:
+    def submit(self, result: TalpResult, rank: int) -> str:
+        return self._publish(result, self._path(rank))
+
+    def submit_sample(self, result: TalpResult, rank: int) -> str:
+        """Publish this rank's latest mid-run snapshot (atomically
+        overwritten on every call — the spool keeps one live snapshot per
+        rank, next to the post-mortem ``talp_rank*`` files)."""
+        return self._publish(result, self._sample_path(rank))
+
+    def _scan_ranks(self, prefix: str) -> List[int]:
         try:
             names = os.listdir(self.spool_dir)
         except FileNotFoundError:
             return []
         ranks = []
         for n in names:
-            if n.startswith(self.PREFIX) and n.endswith(".json"):
+            if n.startswith(prefix) and n.endswith(".json"):
                 try:
-                    ranks.append(int(n[len(self.PREFIX):-len(".json")]))
+                    ranks.append(int(n[len(prefix):-len(".json")]))
                 except ValueError:
                     continue
         return sorted(ranks)
+
+    def spooled_ranks(self) -> List[int]:
+        # SAMPLE_PREFIX does not share PREFIX as a prefix, so post-mortem
+        # and snapshot files never alias each other in these scans.
+        return self._scan_ranks(self.PREFIX)
+
+    def sampled_ranks(self) -> List[int]:
+        return self._scan_ranks(self.SAMPLE_PREFIX)
 
     def _check_stale(self, ranks: List[int]) -> None:
         # A spool dir is one job's artifact. Leftovers from a larger
@@ -317,6 +345,26 @@ class FileSpoolTransport:
         if not results:
             raise ValueError(f"no spooled results in {self.spool_dir}")
         return merge_results(results, name=name)
+
+    def collect_samples(self) -> List[TalpResult]:
+        """Read every rank's latest mid-run snapshot currently present.
+
+        Unlike :meth:`collect`, missing ranks are expected (a rank may not
+        have published its first snapshot yet), so no staleness check —
+        the job snapshot covers whichever ranks have reported so far.
+        """
+        out = []
+        for rank in self.sampled_ranks():
+            with open(self._sample_path(rank)) as f:
+                out.append(talp_result_from_json(f.read()))
+        return out
+
+    def merge_samples(self, name: Optional[str] = None) -> TalpResult:
+        """Job-level mid-run snapshot over the ranks sampled so far."""
+        results = self.collect_samples()
+        if not results:
+            raise ValueError(f"no sample snapshots in {self.spool_dir}")
+        return merge_samples(results, name=name)
 
 
 class AllGatherTransport:
@@ -368,6 +416,16 @@ class AllGatherTransport:
             )
         return merge_results(results, name=name)
 
+    def gather_sample(
+        self, result: TalpResult, name: Optional[str] = None
+    ) -> TalpResult:
+        """Collective job-level mid-run snapshot: every rank contributes
+        its ``TalpMonitor.sample_result()`` and obtains the merged
+        snapshot. Same exchange as :meth:`gather` — the snapshot merge
+        algebra (:func:`merge_samples`) is identical to the post-mortem
+        one, only the inputs differ."""
+        return self.gather(result, name=name)
+
 
 def merge_spool(spool_dir: str, name: Optional[str] = None) -> TalpResult:
     """One-shot post-mortem merge of a rank spool directory."""
@@ -407,8 +465,9 @@ def emit_job_report(
     return job
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     import argparse
+    import sys
 
     from .report import render_tables, to_json
 
@@ -419,8 +478,35 @@ def main() -> None:
     ap.add_argument("--name", default=None, help="job name for the report")
     ap.add_argument("--json-out", default=None,
                     help="also write the merged report as JSON")
-    args = ap.parse_args()
-    job = merge_spool(args.spool_dir, name=args.name)
+    ap.add_argument("--samples", action="store_true",
+                    help="merge mid-run talp_sample_rank*.json snapshots "
+                         "instead of post-mortem rank files")
+    args = ap.parse_args(argv)
+
+    # Diagnose before FileSpoolTransport, whose constructor would
+    # silently create the missing directory.
+    if not os.path.isdir(args.spool_dir):
+        print(f"error: spool directory {args.spool_dir!r} does not exist",
+              file=sys.stderr)
+        sys.exit(2)
+    transport = FileSpoolTransport(args.spool_dir)
+    pattern = (transport.SAMPLE_PREFIX if args.samples else transport.PREFIX)
+    ranks = transport.sampled_ranks() if args.samples else transport.spooled_ranks()
+    if not ranks:
+        print(
+            f"error: no {pattern}*.json files found in {args.spool_dir!r}; "
+            "nothing to merge",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+    try:
+        if args.samples:
+            job = transport.merge_samples(name=args.name)
+        else:
+            job = transport.merge(name=args.name)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        sys.exit(2)
     print(render_tables(job))
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -4,6 +4,10 @@ Two-state model per MPI process: *Useful* computation vs *Not useful*
 (stalled, e.g. in MPI). The metrics form a multiplicative hierarchy:
 
     Parallel Efficiency = Load Balance × Communication Efficiency
+
+The formulas themselves live in :data:`repro.core.hierarchy.POP` — this
+module is a thin façade that validates inputs and exposes the classic
+``PopMetrics`` dataclass.
 """
 
 from __future__ import annotations
@@ -13,16 +17,9 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .hierarchy import POP, MetricFrame, StateDurations, elapsed_time
+
 __all__ = ["PopMetrics", "pop_metrics", "elapsed_time"]
-
-
-def elapsed_time(useful: Sequence[float], not_useful: Sequence[float]) -> float:
-    """Eq. (1): E = max_i (D_U_i + D_notU_i)."""
-    u = np.asarray(useful, dtype=np.float64)
-    nu = np.asarray(not_useful, dtype=np.float64)
-    if u.shape != nu.shape or u.ndim != 1 or len(u) == 0:
-        raise ValueError("useful/not_useful must be equal-length 1-D, non-empty")
-    return float(np.max(u + nu))
 
 
 @dataclass(frozen=True)
@@ -33,13 +30,16 @@ class PopMetrics:
     elapsed: float
     n_processes: int
 
+    @classmethod
+    def from_frame(cls, frame: MetricFrame) -> "PopMetrics":
+        return cls(**frame.scalar_fields())
+
+    def frame(self) -> MetricFrame:
+        return POP.frame_of(self)
+
     def validate(self, tol: float = 1e-9) -> None:
         """Parent = product of children (multiplicative hierarchy)."""
-        prod = self.load_balance * self.communication_efficiency
-        if abs(prod - self.parallel_efficiency) > tol:
-            raise AssertionError(
-                f"PE {self.parallel_efficiency} != LB*CE {prod}"
-            )
+        self.frame().validate(tol)
 
 
 def pop_metrics(
@@ -53,21 +53,11 @@ def pop_metrics(
         raise ValueError("useful must be 1-D, non-empty")
     if np.any(u < 0):
         raise ValueError("negative useful time")
-    n = len(u)
     if elapsed is None:
         if not_useful is None:
             raise ValueError("need not_useful or elapsed")
         elapsed = elapsed_time(u, not_useful)
     if elapsed <= 0:
         raise ValueError("elapsed must be positive")
-    max_u = float(np.max(u))
-    pe = float(np.sum(u)) / (elapsed * n)                      # eq. (3)
-    lb = float(np.sum(u)) / (n * max_u) if max_u > 0 else 0.0  # eq. (4)
-    ce = max_u / elapsed                                       # eq. (5)
-    return PopMetrics(
-        parallel_efficiency=pe,
-        load_balance=lb,
-        communication_efficiency=ce,
-        elapsed=float(elapsed),
-        n_processes=n,
-    )
+    sd = StateDurations(elapsed=float(elapsed), useful=u)
+    return PopMetrics.from_frame(POP.compute(sd))

@@ -4,21 +4,26 @@ TALP's post-mortem output is "available both as plain text in a
 human-readable format and as a JSON file, enabling automated processing".
 We reproduce both, plus the paper's Tables 1–3 layout (metric hierarchy
 vs node count) and — beyond the paper — a multi-run scalability join.
+
+Every layout is *derived* from the declarative specs in
+:mod:`repro.core.hierarchy`: the text tree drawing, the JSON key order
+and the table rows all walk the hierarchy, so a metric registered with
+``Hierarchy.with_child`` appears in every output format automatically.
 """
 
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .analysis import TraceAnalysis
-from .device_metrics import DeviceMetrics
-from .host_metrics import HostMetrics
+from .hierarchy import DEVICE, HOST, Hierarchy, MetricFrame
 from .talp import RegionResult, TalpResult
 
 __all__ = [
     "render_text",
     "render_tables",
+    "render_metrics",
     "to_json",
     "from_json",
     "node_scan_table",
@@ -31,28 +36,62 @@ def _pct(x: Optional[float]) -> str:
     return "   n/a" if x is None else f"{100.0 * x:5.1f}%"
 
 
-def _host_lines(hm: HostMetrics) -> List[str]:
+def _as_frame(obj, hierarchy: Hierarchy) -> MetricFrame:
+    """Metrics façade (or already-computed frame) → MetricFrame."""
+    if isinstance(obj, MetricFrame):
+        return obj
+    return hierarchy.frame_of(obj)
+
+
+def _labelled_rows(frame: MetricFrame) -> List[Tuple[str, float]]:
+    """(tree-drawn label, value) rows in report order: the multiplicative
+    tree first (``|-``/`` `-`` prefixes), then annotation/extension nodes
+    flagged ``[ext]``."""
+    h = frame.hierarchy
+    rows: List[Tuple[str, float]] = []
+    ext: List[Tuple[str, float]] = []
+
+    def rec(spec, prefix: str) -> None:
+        mult = [
+            c for c in spec.children
+            if c.multiplicative and c.key in frame.values
+        ]
+        for c in spec.children:
+            if c.key not in frame.values:
+                continue
+            if not c.multiplicative:
+                ext.append((f"[ext] {c.display}", frame.values[c.key]))
+                continue
+            last = c is mult[-1]
+            rows.append(
+                (f"{prefix}{'`- ' if last else '|- '}{c.display}",
+                 frame.values[c.key])
+            )
+            rec(c, prefix + ("    " if last else "|   "))
+
+    rows.append((h.root.display, frame.values[h.root.key]))
+    rec(h.root, "")
+    return rows + ext
+
+
+def render_metrics(frame_or_metrics, hierarchy: Optional[Hierarchy] = None) -> str:
+    """Render one hierarchy's metric block (the per-side lines of
+    :func:`render_text`) from a frame or a metrics façade."""
+    if isinstance(frame_or_metrics, MetricFrame):
+        frame = frame_or_metrics
+    else:
+        if hierarchy is None:
+            raise ValueError("need a hierarchy to render a plain metrics object")
+        frame = hierarchy.frame_of(frame_or_metrics)
+    return "\n".join(_metric_lines(frame))
+
+
+def _metric_lines(frame: MetricFrame) -> List[str]:
+    side = frame.hierarchy.side
     return [
-        f"Host    Parallel Efficiency        {_pct(hm.parallel_efficiency)}",
-        f"        |- MPI Parallel Eff.       {_pct(hm.mpi_parallel_efficiency)}",
-        f"        |   |- Comm. Eff.          {_pct(hm.communication_efficiency)}",
-        f"        |   `- Load Balance        {_pct(hm.load_balance)}",
-        f"        `- Device Offload Eff.     {_pct(hm.device_offload_efficiency)}",
+        f"{side if i == 0 else '':8s}{label:27s}{_pct(value)}"
+        for i, (label, value) in enumerate(_labelled_rows(frame))
     ]
-
-
-def _device_lines(dm: DeviceMetrics) -> List[str]:
-    lines = [
-        f"Device  Parallel Efficiency        {_pct(dm.parallel_efficiency)}",
-        f"        |- Load Balance            {_pct(dm.load_balance)}",
-        f"        |- Communication Eff.      {_pct(dm.communication_efficiency)}",
-        f"        `- Orchestration Eff.      {_pct(dm.orchestration_efficiency)}",
-    ]
-    if dm.computational_efficiency is not None:
-        lines.append(
-            f"        [ext] Computational Eff.   {_pct(dm.computational_efficiency)}"
-        )
-    return lines
 
 
 def render_text(result: Result, title: Optional[str] = None) -> str:
@@ -68,9 +107,9 @@ def render_text(result: Result, title: Optional[str] = None) -> str:
         "=" * 64,
     ]
     if result.host is not None:
-        lines += _host_lines(result.host)
+        lines += _metric_lines(_as_frame(result.host, HOST))
     if result.device is not None:
-        lines += _device_lines(result.device)
+        lines += _metric_lines(_as_frame(result.device, DEVICE))
     if result.host_states:
         lines.append("-" * 64)
         lines.append("host states (s):   rank    useful    offload        mpi")
@@ -122,25 +161,29 @@ def from_json(text: str) -> Dict:
     return json.loads(text)
 
 
-_HOST_ROWS = [
-    ("Parallel Efficiency", "parallel_efficiency"),
-    ("- MPI Parallel Eff.", "mpi_parallel_efficiency"),
-    ("    Comm. Eff.", "communication_efficiency"),
-    ("    Load Balance", "load_balance"),
-    ("- Device Offload Eff.", "device_offload_efficiency"),
-]
-_DEV_ROWS = [
-    ("Parallel Efficiency", "parallel_efficiency"),
-    ("- Load Balance", "load_balance"),
-    ("- Communication Eff.", "communication_efficiency"),
-    ("- Orchestration Eff.", "orchestration_efficiency"),
-]
+def _table_rows(hierarchy: Hierarchy) -> List[Tuple[str, str]]:
+    """Paper Tables 1–3 row labels, derived from the spec: depth-0 bare,
+    depth-1 ``- `` bullet, deeper indented; annotation nodes excluded."""
+    rows: List[Tuple[str, str]] = []
+
+    def rec(spec, depth: int) -> None:
+        if not spec.multiplicative:
+            return
+        indent = "" if depth == 0 else ("- " if depth == 1 else "    ")
+        rows.append((indent + spec.display, spec.key))
+        for c in spec.children:
+            rec(c, depth + 1)
+
+    rec(hierarchy.root, 0)
+    return rows
 
 
 def node_scan_table(
     results: Sequence[Result],
     labels: Sequence[str],
     title: str = "TALP Output",
+    host_hierarchy: Hierarchy = HOST,
+    device_hierarchy: Hierarchy = DEVICE,
 ) -> str:
     """Paper Tables 1–3 layout: metric hierarchy rows × run columns."""
     if len(results) != len(labels):
@@ -158,10 +201,17 @@ def node_scan_table(
         )
         lines.append(f"{side:8s}{label:28s}{cells}")
 
-    for i, (label, attr) in enumerate(_HOST_ROWS):
-        vals = [getattr(r.host, attr) if r.host else None for r in results]
-        row("Host" if i == 0 else "", label, vals)
-    for i, (label, attr) in enumerate(_DEV_ROWS):
-        vals = [getattr(r.device, attr) if r.device else None for r in results]
-        row("Device" if i == 0 else "", label, vals)
+    def value_of(obj, key: str) -> Optional[float]:
+        if obj is None:
+            return None
+        if isinstance(obj, MetricFrame):
+            return obj.get(key)
+        return getattr(obj, key, None)
+
+    for i, (label, key) in enumerate(_table_rows(host_hierarchy)):
+        row(host_hierarchy.side if i == 0 else "", label,
+            [value_of(r.host, key) for r in results])
+    for i, (label, key) in enumerate(_table_rows(device_hierarchy)):
+        row(device_hierarchy.side if i == 0 else "", label,
+            [value_of(r.device, key) for r in results])
     return "\n".join(lines)

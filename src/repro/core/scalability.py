@@ -15,7 +15,9 @@ derives the POP scaling branch relative to a baseline run:
                                    total useful work inflated with scale)
 
 so Global = Computational Scalability × Parallel Efficiency, preserving
-POP's multiplicative structure across the scan.
+POP's multiplicative structure across the scan. The formulas live in
+:data:`repro.core.hierarchy.SCALABILITY`; this module feeds it one
+:class:`StateDurations` per run (baseline quantities via ``extras``).
 """
 
 from __future__ import annotations
@@ -24,6 +26,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Union
 
 from .analysis import TraceAnalysis
+from .hierarchy import SCALABILITY, StateDurations
 from .talp import RegionResult
 
 Result = Union[RegionResult, TraceAnalysis]
@@ -42,8 +45,10 @@ class ScalabilityPoint:
     computational_scalability: float
 
     def validate(self, tol: float = 1e-6) -> None:
-        prod = self.computational_scalability * self.parallel_efficiency
-        if abs(prod - self.global_efficiency) > tol:
+        try:
+            SCALABILITY.frame_of(self).validate(tol)
+        except AssertionError:
+            prod = self.computational_scalability * self.parallel_efficiency
             raise AssertionError(
                 f"{self.label}: GE {self.global_efficiency} != "
                 f"CS*PE {prod}"
@@ -77,15 +82,24 @@ def scalability_scan(
     base_r = res[0]
     points = []
     for r, lab, n in zip(results, labels, res):
-        speedup = base_t / r.elapsed if r.elapsed > 0 else 0.0
-        ge = speedup / (n / base_r) if n else 0.0
-        pe = _pe(r)
-        cs = ge / pe if pe > 0 else 0.0
+        frame = SCALABILITY.compute(
+            StateDurations(
+                elapsed=r.elapsed,
+                extras={
+                    "base_elapsed": base_t,
+                    "resources": float(n),
+                    "base_resources": float(base_r),
+                    "parallel_efficiency": _pe(r),
+                },
+            )
+        )
         points.append(
             ScalabilityPoint(
                 label=lab, resources=n, elapsed=r.elapsed,
-                parallel_efficiency=pe, speedup=speedup,
-                global_efficiency=ge, computational_scalability=cs,
+                parallel_efficiency=frame["parallel_efficiency"],
+                speedup=frame["speedup"],
+                global_efficiency=frame["global_efficiency"],
+                computational_scalability=frame["computational_scalability"],
             )
         )
     return points

@@ -39,24 +39,45 @@ __all__ = ["TalpMonitor", "RegionResult", "TalpResult"]
 
 @dataclass
 class _RegionAcc:
-    """Accumulator for one (region, rank)."""
+    """Accumulator for one (region, rank).
+
+    ``closed_total`` is the running sum of closed-window durations,
+    maintained at ``close_region`` time so ``elapsed()`` is O(1) instead
+    of O(#windows). ``window_intervals`` likewise keeps a flattened-array
+    cache of the closed windows and folds in only the ones appended since
+    the last call — an open region samples in O(1) per new window.
+    """
 
     windows: List[Tuple[float, float]] = field(default_factory=list)
     open_since: Optional[float] = None
     offload: float = 0.0
     mpi: float = 0.0
+    closed_total: float = 0.0
+    _flat: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _flat_n: int = field(default=0, init=False, repr=False, compare=False)
 
     def elapsed(self, now: Optional[float] = None) -> float:
-        tot = sum(e - s for s, e in self.windows)
+        tot = self.closed_total
         if self.open_since is not None and now is not None:
             tot += max(0.0, now - self.open_since)
         return tot
 
     def window_intervals(self, now: Optional[float] = None) -> np.ndarray:
-        w = list(self.windows)
+        if self._flat_n < len(self.windows):
+            new = ivx.as_intervals(self.windows[self._flat_n:])
+            if self._flat is not None and len(self._flat):
+                new = np.concatenate([self._flat, new], axis=0)
+            self._flat = ivx.flatten(new)
+            self._flat_n = len(self.windows)
+        flat = self._flat if self._flat is not None else ivx.EMPTY
         if self.open_since is not None and now is not None:
-            w.append((self.open_since, now))
-        return ivx.flatten(ivx.as_intervals(w)) if w else ivx.EMPTY.copy()
+            open_iv = ivx.as_intervals([(self.open_since, now)])
+            if not len(flat):
+                return open_iv
+            return ivx.flatten(np.concatenate([flat, open_iv], axis=0))
+        return flat.copy()
 
 
 @dataclass
@@ -100,11 +121,18 @@ class TalpMonitor:
         clock: Callable[[], float] = time.perf_counter,
         backend: Optional[object] = None,
         auto_start: bool = True,
+        incremental: bool = True,
     ):
         self.name = name
         self.rank = rank
         self.clock = clock
         self.backend = backend
+        # ``incremental`` keeps the per-device flattened-interval arrays
+        # cached between sample() calls, folding in only records that
+        # arrived since the previous sample (via DeviceTimeline.compact).
+        # Disable to force a full re-flatten per sample (the baseline the
+        # merge benchmark measures against).
+        self.incremental = incremental
         # region name -> rank -> accumulator  (single-process monitor has
         # one rank; merged results may carry many).
         self._acc: Dict[str, _RegionAcc] = {}
@@ -112,6 +140,8 @@ class TalpMonitor:
         self._state: Optional[HostState] = None
         self._state_since: Optional[float] = None
         self.devices: Dict[int, DeviceTimeline] = {}
+        # dev -> (n_records watermark, (kernel, memory) flattened arrays)
+        self._flat_cache: Dict[int, Tuple[int, Tuple[np.ndarray, np.ndarray]]] = {}
         if backend is not None and hasattr(backend, "start"):
             backend.start()
         if auto_start:
@@ -147,6 +177,7 @@ class TalpMonitor:
         acc = self._acc[name]
         now = self.clock()
         acc.windows.append((acc.open_since, now))
+        acc.closed_total += now - acc.open_since
         acc.open_since = None
         self._region_stack.pop()
 
@@ -267,12 +298,28 @@ class TalpMonitor:
     def _device_flats(self) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
         """Per-device flattened (kernel, memory-minus-kernel) intervals —
         the region-independent part of the post-processing, computed once
-        per sample()/finalize() and shared across regions."""
+        per sample()/finalize() and shared across regions.
+
+        In incremental mode a per-device cache keyed on the timeline's
+        ``n_records`` watermark makes repeated sampling cheap: new raw
+        records are first folded into the timeline's compacted arrays
+        (reusing the ``compact_threshold`` streaming machinery), the
+        flattened pair is rebuilt from those, and an unchanged timeline
+        is a pure cache hit — no re-flattening of the whole history.
+        """
         flats: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         for dev, tl in sorted(self.devices.items()):
+            if self.incremental:
+                cached = self._flat_cache.get(dev)
+                if cached is not None and cached[0] == tl.n_records:
+                    flats[dev] = cached[1]
+                    continue
+                tl.compact()  # fold pending records once, incrementally
             kern = tl.kind_intervals(DeviceActivity.KERNEL)
             mem = ivx.subtract(tl.kind_intervals(DeviceActivity.MEMORY), kern)
             flats[dev] = (kern, mem)
+            if self.incremental:
+                self._flat_cache[dev] = (tl.n_records, flats[dev])
         return flats
 
     def _region_result(
@@ -321,7 +368,28 @@ class TalpMonitor:
     def sample(self, region: Optional[str] = None) -> RegionResult:
         """Online metrics for an open (or closed) region — TALP's runtime mode."""
         self._flush_backend()
-        return self._region_result(region or self.GLOBAL, now=self.clock())
+        return self._region_result(
+            region or self.GLOBAL, now=self.clock(),
+            device_flats=self._device_flats(),
+        )
+
+    def sample_result(self) -> TalpResult:
+        """Non-destructive all-regions snapshot at the current clock — the
+        per-rank payload for :func:`repro.core.merge.merge_samples`.
+
+        Open regions are measured up to *now*; nothing is closed and the
+        monitor keeps running, so snapshots can be taken repeatedly during
+        the run (e.g. on a ``--talp-sample-every`` cadence) and merged
+        across ranks into a job-level mid-run report.
+        """
+        self._flush_backend()
+        now = self.clock()
+        flats = self._device_flats()
+        regions = {
+            name: self._region_result(name, now=now, device_flats=flats)
+            for name in self._acc
+        }
+        return TalpResult(name=self.name, regions=regions)
 
     def finalize(self) -> TalpResult:
         """Close remaining regions and produce the post-mortem result."""

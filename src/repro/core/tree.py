@@ -2,20 +2,24 @@
 
 POP metrics are organized hierarchically where each parent is the
 product of its children. ``MetricNode`` captures that structure
-generically; builders assemble the paper's host and device trees from
-the computed metric dataclasses, and ``validate`` enforces the
-multiplicative invariant (a property test target).
+generically; the trees themselves are *derived* from the declarative
+specs in :mod:`repro.core.hierarchy` (``tree_from_frame``), so the shape
+lives in exactly one place. ``validate`` enforces the multiplicative
+invariant (a property test target).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional
+from typing import TYPE_CHECKING, Dict, Iterator, List, Optional
 
-from .device_metrics import DeviceMetrics
-from .host_metrics import HostMetrics
+from .hierarchy import DEVICE, HOST, MetricFrame, MetricSpec
 
-__all__ = ["MetricNode", "host_tree", "device_tree"]
+if TYPE_CHECKING:  # façade types, for signatures only
+    from .device_metrics import DeviceMetrics
+    from .host_metrics import HostMetrics
+
+__all__ = ["MetricNode", "tree_from_frame", "host_tree", "device_tree"]
 
 
 @dataclass
@@ -67,45 +71,40 @@ class MetricNode:
         )
 
 
-def host_tree(hm: HostMetrics) -> MetricNode:
-    """Paper Fig. 2 (host resources); new metrics are the orange boxes."""
-    return MetricNode(
-        "Parallel Efficiency",
-        hm.parallel_efficiency,
-        children=[
-            MetricNode(
-                "MPI Parallel Eff.",
-                hm.mpi_parallel_efficiency,
-                children=[
-                    MetricNode("Comm. Eff.", hm.communication_efficiency),
-                    MetricNode("Load Balance", hm.load_balance),
-                ],
-            ),
-            MetricNode("Device Offload Eff.", hm.device_offload_efficiency),
-        ],
-    )
+def tree_from_frame(frame: MetricFrame) -> MetricNode:
+    """Derive the MetricNode tree from a computed hierarchy frame.
 
+    Non-multiplicative (annotation/extension) nodes are suffixed
+    ``(ext)`` and excluded from the product invariant; optional nodes
+    absent from the frame are skipped entirely.
+    """
 
-def device_tree(dm: DeviceMetrics) -> MetricNode:
-    """Paper Fig. 3 (device resources), Parallel Efficiency branch."""
-    root = MetricNode(
-        "Parallel Efficiency",
-        dm.parallel_efficiency,
-        children=[
-            MetricNode("Load Balance", dm.load_balance),
-            MetricNode("Communication Eff.", dm.communication_efficiency),
-            MetricNode("Orchestration Eff.", dm.orchestration_efficiency),
-        ],
-    )
-    if dm.computational_efficiency is not None:
-        # Beyond-paper: the paper's future-work branch. Not a
-        # multiplicative child of Parallel Efficiency (it is the sibling
-        # branch under Device Efficiency), so mark non-multiplicative.
-        root.children.append(
-            MetricNode(
-                "Computational Eff. (ext)",
-                dm.computational_efficiency,
-                multiplicative=False,
-            )
+    def build(spec: MetricSpec) -> Optional[MetricNode]:
+        if spec.key not in frame.values:
+            return None
+        name = spec.display if spec.multiplicative else f"{spec.display} (ext)"
+        node = MetricNode(
+            name, frame.values[spec.key], multiplicative=spec.multiplicative
+        )
+        for c in spec.children:
+            child = build(c)
+            if child is not None:
+                node.children.append(child)
+        return node
+
+    root = build(frame.hierarchy.root)
+    if root is None:
+        raise ValueError(
+            f"frame for hierarchy {frame.hierarchy.name!r} has no root value"
         )
     return root
+
+
+def host_tree(hm: "HostMetrics") -> MetricNode:
+    """Paper Fig. 2 (host resources); new metrics are the orange boxes."""
+    return tree_from_frame(HOST.frame_of(hm))
+
+
+def device_tree(dm: "DeviceMetrics") -> MetricNode:
+    """Paper Fig. 3 (device resources), Parallel Efficiency branch."""
+    return tree_from_frame(DEVICE.frame_of(dm))

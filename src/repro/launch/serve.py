@@ -24,7 +24,7 @@ import numpy as np
 
 from ..configs import get_config, list_configs, smoke_config
 from ..core.backends import RuntimeBackend
-from ..core.merge import emit_job_report
+from ..core.merge import FileSpoolTransport, emit_job_report
 from ..core.report import render_tables, to_json
 from ..core.talp import TalpMonitor
 from ..models import lm
@@ -44,12 +44,33 @@ def serve(
     rank: int = 0,
     world_size: int = 1,
     talp_spool: str = None,
+    talp_sample_every: int = 0,
 ):
     """Serve a batch of requests. Multi-rank serving fleets: pass
     ``rank``/``world_size`` and a shared ``talp_spool`` dir to get one
-    job-level TALP report across all serving processes."""
+    job-level TALP report across all serving processes.
+    ``talp_sample_every=N`` publishes a mid-run snapshot every N decoded
+    tokens (merged across ranks when a spool is given)."""
     backend = RuntimeBackend()
     mon = TalpMonitor("serve", rank=rank, backend=backend)
+    sample_transport = (
+        FileSpoolTransport(talp_spool, world_size=world_size)
+        if talp_spool and talp_sample_every else None
+    )
+
+    def sample_snapshot(tag: str) -> None:
+        snapshot = mon.sample_result()
+        if sample_transport is not None:
+            sample_transport.submit_sample(snapshot, rank=rank)
+            job_snap = sample_transport.merge_samples(name=mon.name)
+        else:
+            job_snap = snapshot
+        if verbose:
+            g = job_snap.regions.get(TalpMonitor.GLOBAL)
+            if g is not None and g.host is not None:
+                print(f"[talp sample] {tag} "
+                      f"ranks={g.n_ranks} devices={g.n_devices} "
+                      f"PE_host={g.host.parallel_efficiency:.3f}")
     key = jax.random.PRNGKey(seed)
 
     with mon.region("init"):
@@ -94,6 +115,8 @@ def serve(
             with mon.offload():
                 logits, caches, pos = backend.wait(h)
             tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+            if talp_sample_every and (t + 1) % talp_sample_every == 0:
+                sample_snapshot(f"token {t}")
 
     result = mon.finalize()
     if verbose:
@@ -114,6 +137,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--talp-json", default=None)
+    ap.add_argument("--talp-sample-every", type=int, default=0,
+                    help="every N decoded tokens publish a mid-run snapshot "
+                         "and (with --talp-spool) merge a job-level report")
     ap.add_argument("--talp-spool", default=None,
                     help="shared dir for per-rank reports + job-level merge")
     ap.add_argument("--rank", type=int, default=0)
@@ -123,7 +149,8 @@ def main():
     t0 = time.time()
     tokens, _ = serve(cfg, args.requests, args.prompt_len, args.gen_len,
                       talp_json=args.talp_json, rank=args.rank,
-                      world_size=args.world_size, talp_spool=args.talp_spool)
+                      world_size=args.world_size, talp_spool=args.talp_spool,
+                      talp_sample_every=args.talp_sample_every)
     dt = time.time() - t0
     n = tokens.size
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

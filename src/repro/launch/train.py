@@ -32,7 +32,7 @@ import numpy as np
 from ..checkpoint.manager import CheckpointManager
 from ..configs import get_config, list_configs, smoke_config
 from ..core.backends import RuntimeBackend
-from ..core.merge import emit_job_report
+from ..core.merge import FileSpoolTransport, emit_job_report
 from ..core.report import render_tables, to_json
 from ..core.talp import TalpMonitor
 from ..data.pipeline import DataConfig, SyntheticTokenPipeline
@@ -59,6 +59,7 @@ def train(
     rank: int = 0,
     world_size: int = 1,
     talp_spool: str = None,
+    talp_sample_every: int = 0,
 ):
     """Train a (usually reduced) config; returns (state, history, talp).
 
@@ -66,10 +67,20 @@ def train(
     shared ``talp_spool`` directory — every rank spools its per-process
     TALP report there, and whichever rank completes the spool last merges
     it into the job-level report (``talp_job.json``).
+
+    ``talp_sample_every=N`` additionally takes a non-destructive
+    all-regions snapshot every N steps (``TalpMonitor.sample_result``);
+    with a ``talp_spool`` the snapshot is published to the spool and
+    merged across whichever ranks have reported so far — a *job-level*
+    mid-run TALP report, TALP's online mode at job scope.
     """
     opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10, total_steps=steps)
     backend = RuntimeBackend()
     mon = TalpMonitor("train", rank=rank, backend=backend)
+    sample_transport = (
+        FileSpoolTransport(talp_spool, world_size=world_size)
+        if talp_spool and talp_sample_every else None
+    )
 
     data = SyntheticTokenPipeline(
         DataConfig(
@@ -126,6 +137,19 @@ def train(
                 print(f"[talp online] step {step} "
                       f"PE_host={snap.host.parallel_efficiency:.3f} "
                       f"OE={snap.host.device_offload_efficiency:.3f}")
+            if talp_sample_every and (step + 1) % talp_sample_every == 0:
+                snapshot = mon.sample_result()
+                if sample_transport is not None:
+                    sample_transport.submit_sample(snapshot, rank=rank)
+                    job_snap = sample_transport.merge_samples(name=mon.name)
+                else:
+                    job_snap = snapshot
+                if verbose:
+                    g = job_snap.regions.get(TalpMonitor.GLOBAL)
+                    if g is not None and g.host is not None:
+                        print(f"[talp sample] step {step} "
+                              f"ranks={g.n_ranks} devices={g.n_devices} "
+                              f"PE_host={g.host.parallel_efficiency:.3f}")
             if verbose and (step % 10 == 0 or step == steps - 1):
                 print(f"step {step:5d} loss {history[-1]['loss']:.4f} "
                       f"({dt*1e3:.0f} ms)")
@@ -159,6 +183,9 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--talp-interval", type=int, default=0)
+    ap.add_argument("--talp-sample-every", type=int, default=0,
+                    help="every N steps publish a mid-run snapshot and "
+                         "(with --talp-spool) merge a job-level report")
     ap.add_argument("--talp-json", default=None)
     ap.add_argument("--talp-spool", default=None,
                     help="shared dir for per-rank reports + job-level merge")
@@ -180,6 +207,7 @@ def main():
         rank=args.rank,
         world_size=args.world_size,
         talp_spool=args.talp_spool,
+        talp_sample_every=args.talp_sample_every,
     )
     if args.history_json:
         with open(args.history_json, "w") as f:

@@ -1,0 +1,286 @@
+"""Declarative hierarchy engine: multiplicative-invariant property tests,
+JSON round-trips, spec-driven rendering, and online job-level sampling."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DeviceActivity, TalpMonitor
+from repro.core.hierarchy import (
+    DEVICE,
+    HOST,
+    POP,
+    SCALABILITY,
+    Hierarchy,
+    MetricSpec,
+    StateDurations,
+)
+from repro.core.merge import (
+    FileSpoolTransport,
+    merge_results,
+    merge_samples,
+    talp_result_from_json,
+)
+from repro.core.report import from_json, node_scan_table, render_metrics, to_json
+from repro.core.scalability import scalability_scan
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+durations = st.lists(st.floats(0.0, 1e3), min_size=1, max_size=16)
+
+
+# ---------------------------------------------------------------------------
+# property: parent = product of children for random non-negative inputs
+# ---------------------------------------------------------------------------
+@settings(max_examples=200)
+@given(durations, st.floats(1e-3, 1e4))
+def test_pop_multiplicative_invariant(useful, elapsed):
+    frame = POP.compute(StateDurations(elapsed=elapsed, useful=useful))
+    frame.validate(tol=1e-9 * max(1.0, frame["parallel_efficiency"]))
+
+
+@settings(max_examples=200)
+@given(durations, durations, st.floats(1e-3, 1e4))
+def test_host_multiplicative_invariant(useful, offload, elapsed):
+    n = min(len(useful), len(offload))
+    frame = HOST.compute(
+        StateDurations(elapsed=elapsed, useful=useful[:n], offload=offload[:n])
+    )
+    frame.validate(tol=1e-9 * max(1.0, frame["parallel_efficiency"]))
+
+
+@settings(max_examples=200)
+@given(durations, durations, st.floats(1e-3, 1e4))
+def test_device_multiplicative_invariant(kernel, memory, elapsed):
+    n = min(len(kernel), len(memory))
+    frame = DEVICE.compute(
+        StateDurations(elapsed=elapsed, kernel=kernel[:n], memory=memory[:n])
+    )
+    frame.validate(tol=1e-9 * max(1.0, frame["parallel_efficiency"]))
+
+
+def test_scalability_invariant_via_engine():
+    monitors = [_run_monitor(rank=r) for r in range(2)]
+    results = [m.finalize()["Global"] for m in monitors]
+    for p in scalability_scan(results, resources=[1, 2]):
+        p.validate()
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics
+# ---------------------------------------------------------------------------
+def test_compute_matches_facades():
+    sd = StateDurations(
+        elapsed=4.0, useful=[3.0, 2.0], offload=[0.5, 1.0], mpi=[0.5, 1.0],
+        kernel=[2.0, 1.5], memory=[0.5, 0.25],
+    )
+    hf = HOST.compute(sd)
+    df = DEVICE.compute(sd)
+    from repro.core import device_metrics, host_metrics
+
+    hm = host_metrics([3.0, 2.0], [0.5, 1.0], [0.5, 1.0], elapsed=4.0)
+    dm = device_metrics([2.0, 1.5], [0.5, 0.25], 4.0)
+    assert hf.as_dict() == hm.as_dict()
+    assert df.as_dict() == dm.as_dict()
+
+
+def test_formula_dependency_resolution_and_cycle_detection():
+    frame = SCALABILITY.compute(
+        StateDurations(
+            elapsed=2.0,
+            extras={"base_elapsed": 4.0, "resources": 2.0,
+                    "base_resources": 1.0, "parallel_efficiency": 0.8},
+        )
+    )
+    assert frame["speedup"] == 2.0
+    assert frame["global_efficiency"] == 1.0
+    assert frame["computational_scalability"] == 1.0 / 0.8
+
+    loop = Hierarchy(
+        name="loop", side="X", count_key="n", count=lambda sd: 0,
+        root=MetricSpec("a", "A", lambda sd, dep: dep("b"),
+                        children=(MetricSpec("b", "B", lambda sd, dep: dep("a")),)),
+    )
+    with pytest.raises(RuntimeError, match="cycle"):
+        loop.compute(StateDurations(elapsed=1.0))
+
+
+def test_with_child_appears_in_every_output():
+    ext = DEVICE.with_child(
+        "parallel_efficiency",
+        MetricSpec("occupancy", "SM Occupancy",
+                   lambda sd, dep: sd.extras.get("occupancy"),
+                   multiplicative=False, optional=True),
+    )
+    sd = StateDurations(elapsed=4.0, kernel=[2.0, 1.5], memory=[0.5, 0.25],
+                        extras={"occupancy": 0.5})
+    frame = ext.compute(sd)
+    frame.validate()  # annotation node excluded from the product
+    # text rendering
+    text = render_metrics(frame)
+    assert "[ext] SM Occupancy" in text
+    # JSON layout: optional node after elapsed/count
+    keys = list(frame.as_dict())
+    assert keys.index("occupancy") > keys.index("n_devices")
+    assert frame.as_dict()["occupancy"] == 0.5
+    # tree view
+    assert frame.tree().find("SM Occupancy (ext)").value == 0.5
+
+    class R:
+        host = None
+        device = frame
+
+    table = node_scan_table([R()], ["run"], device_hierarchy=ext)
+    assert "Parallel Efficiency" in table  # spec-driven rows still render
+
+
+def test_duplicate_key_rejected():
+    with pytest.raises(ValueError, match="already exists"):
+        DEVICE.with_child(
+            "parallel_efficiency",
+            MetricSpec("load_balance", "LB2", lambda sd, dep: 1.0),
+        )
+
+
+# ---------------------------------------------------------------------------
+# fixtures: deterministic monitors
+# ---------------------------------------------------------------------------
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _run_monitor(rank=0, n_records=256, incremental=True):
+    clk = _Clock()
+    mon = TalpMonitor("job", rank=rank, clock=clk, incremental=incremental)
+    with mon.region("step"):
+        clk.advance(1.0 + 0.25 * rank)
+        with mon.offload():
+            clk.advance(0.5)
+    t = 0.0
+    for i in range(n_records):
+        kind = DeviceActivity.KERNEL if i % 3 else DeviceActivity.MEMORY
+        mon.add_device_record(0, kind, t, t + 0.004)
+        t += 0.003
+    clk.advance(1.0)
+    return mon
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trips of a merged job-level result
+# ---------------------------------------------------------------------------
+def test_to_json_from_json_bit_for_bit():
+    job = merge_results([_run_monitor(r).finalize() for r in range(3)],
+                        name="job")
+    text = to_json(job)
+    # from_json -> dumps reproduces the exact bytes
+    assert json.dumps(from_json(text), indent=2) == text
+    # full reconstruction (metrics recomputed) -> identical serialization
+    assert to_json(talp_result_from_json(text)) == text
+
+
+# ---------------------------------------------------------------------------
+# online sampling: incremental engine + job-level snapshots
+# ---------------------------------------------------------------------------
+def test_incremental_sampling_matches_full_reflatten():
+    a = _run_monitor(n_records=2000, incremental=True)
+    b = _run_monitor(n_records=2000, incremental=False)
+    assert to_json(a.sample()) == to_json(b.sample())
+    # cache hit on unchanged timeline
+    assert to_json(a.sample()) == to_json(b.sample())
+    # cache invalidation on new records
+    for m in (a, b):
+        m.add_device_record(0, DeviceActivity.KERNEL, 100.0, 100.5)
+    assert to_json(a.sample()) == to_json(b.sample())
+    assert to_json(a.sample_result()) == to_json(b.sample_result())
+
+
+def test_sample_result_is_non_destructive():
+    mon = _run_monitor()
+    mon.open_region("live")
+    mon.clock.advance(0.5)
+    snap = mon.sample_result()
+    assert set(snap.regions) == {"Global", "step", "live"}
+    assert mon._region_stack == ["Global", "live"]  # nothing closed
+    snap2 = mon.sample_result()  # repeatable (frozen clock)
+    assert to_json(snap) == to_json(snap2)
+
+
+def test_merge_samples_agrees_with_merge_results_on_finalized_runs():
+    results = [_run_monitor(r).finalize() for r in range(3)]
+    assert to_json(merge_samples(results, name="job")) == \
+        to_json(merge_results(results, name="job"))
+
+
+def test_sample_spool_roundtrip(tmp_path):
+    spool = FileSpoolTransport(str(tmp_path), world_size=3)
+    monitors = [_run_monitor(r) for r in range(3)]
+    # rank 1 has not published yet: partial merge covers ranks 0 and 2
+    for r in (0, 2):
+        spool.submit_sample(monitors[r].sample_result(), rank=r)
+    assert spool.sampled_ranks() == [0, 2]
+    partial = spool.merge_samples(name="job")
+    assert partial["Global"].n_ranks == 2
+    # snapshots coexist with (and do not pollute) the post-mortem spool
+    assert spool.spooled_ranks() == []
+    for r in range(3):
+        spool.submit_sample(monitors[r].sample_result(), rank=r)
+    full = spool.merge_samples(name="job")
+    assert full["Global"].n_ranks == 3
+
+
+def test_region_acc_running_elapsed_matches_windows():
+    mon = _run_monitor()
+    acc = mon._acc["step"]
+    assert acc.closed_total == sum(e - s for s, e in acc.windows)
+    with mon.region("step"):
+        mon.clock.advance(0.75)
+    assert acc.closed_total == sum(e - s for s, e in acc.windows)
+    assert acc.elapsed() == acc.closed_total
+
+
+# ---------------------------------------------------------------------------
+# merge CLI error handling
+# ---------------------------------------------------------------------------
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.merge", *args],
+        capture_output=True, text=True, env=env,
+    )
+
+
+def test_cli_missing_spool_dir(tmp_path):
+    proc = _run_cli(str(tmp_path / "nope"))
+    assert proc.returncode == 2
+    assert "does not exist" in proc.stderr
+
+
+def test_cli_empty_spool_dir(tmp_path):
+    proc = _run_cli(str(tmp_path))
+    assert proc.returncode == 2
+    assert "talp_rank*.json" in proc.stderr
+
+
+def test_cli_merges_spool(tmp_path):
+    spool = FileSpoolTransport(str(tmp_path))
+    for r in range(2):
+        spool.submit(_run_monitor(r).finalize(), rank=r)
+    out = tmp_path / "job.json"
+    proc = _run_cli(str(tmp_path), "--json-out", str(out))
+    assert proc.returncode == 0, proc.stderr
+    assert "TALP" in proc.stdout or "region" in proc.stdout
+    job = talp_result_from_json(out.read_text())
+    assert job["Global"].n_ranks == 2
