@@ -15,12 +15,15 @@ framework benches. Prints ``name,us_per_call,derived`` CSV rows.
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
 import time
 
 import numpy as np
+
+ROWS = []  # (name, us_per_call, derived) — mirrored to --json
 
 
 def _bench(fn, n_iter: int = 5, warmup: int = 1):
@@ -33,6 +36,8 @@ def _bench(fn, n_iter: int = 5, warmup: int = 1):
 
 
 def _row(name: str, us: float, derived):
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")
     sys.stdout.flush()
 
@@ -112,6 +117,32 @@ def bench_talp_overhead():
 
     us2 = _bench(run_sample, n_iter=20)
     _row("talp_online_sample", us2, "per-call")
+
+    # record-ingestion throughput: scalar add() vs columnar ingest_arrays()
+    from repro.core.states import DeviceActivity, DeviceTimeline
+
+    m = 50_000
+    rng = np.random.default_rng(0)
+    starts = np.sort(rng.uniform(0, m * 1e-3, m))
+    ends = starts + rng.uniform(1e-4, 3e-3, m)
+
+    def run_scalar():
+        tl = DeviceTimeline(device=0)
+        for s, e in zip(starts, ends):
+            tl.add(DeviceActivity.KERNEL, s, e)
+        tl.compact()
+
+    def run_columnar():
+        tl = DeviceTimeline(device=0)
+        tl.ingest_arrays(DeviceActivity.KERNEL, starts, ends)
+        tl.compact()
+
+    us3 = _bench(run_scalar, n_iter=3)
+    _row("talp_ingest_scalar_add_50k", us3,
+         f"{m / (us3 / 1e6) / 1e6:.1f}M rec/s")
+    us4 = _bench(run_columnar, n_iter=3)
+    _row("talp_ingest_columnar_50k", us4,
+         f"{m / (us4 / 1e6) / 1e6:.1f}M rec/s")
 
 
 def bench_flatten_throughput():
@@ -211,6 +242,10 @@ def bench_roofline_cells():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write the rows as a BENCH_talp.json trajectory")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     bench_pils()
     bench_app_tables()
@@ -218,6 +253,9 @@ def main() -> None:
     bench_flatten_throughput()
     bench_kernels()
     bench_roofline_cells()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "talp", "rows": ROWS}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+import numpy as np
+
 from ..analysis import TraceAnalysis, analyze_trace
 from ..states import DeviceActivity, Trace
 
@@ -99,23 +101,30 @@ def trace_from_step_model(
 ) -> Trace:
     """Synthesize a job trace: one StepModel per device, repeated ``steps``
     times. Device imbalance is expressed by passing per-device models with
-    different FLOP counts."""
+    different FLOP counts.
+
+    Device activity is generated **columnar**: per device, the kernel and
+    memory records of all steps are computed as whole start/end columns
+    (one ``arange`` per device) and delivered through
+    :meth:`~repro.core.states.DeviceTimeline.ingest_arrays` — no
+    per-step Python loop, no ``DeviceRecord`` objects."""
     trace = Trace(name="analytical")
-    t = 0.0
     step_busy = max(m.kernel_s + m.memory_s for m in models)
     step_gap = max(m.host_gap_s for m in models)
-    for _ in range(steps):
-        t0 = t + host_useful_s
-        for d, m in enumerate(models):
-            if m.kernel_s > 0:
-                trace.device(d).add(DeviceActivity.KERNEL, t0, t0 + m.kernel_s)
-            if m.memory_s > 0:
-                trace.device(d).add(
-                    DeviceActivity.MEMORY,
-                    t0 + m.kernel_s,
-                    t0 + m.kernel_s + m.memory_s,
-                )
-        t = t0 + step_busy + step_gap
+    period = host_useful_s + step_busy + step_gap
+    # step s starts its device work at host_useful_s + s*period
+    t0s = host_useful_s + period * np.arange(steps, dtype=np.float64)
+    for d, m in enumerate(models):
+        tl = trace.device(d)
+        if m.kernel_s > 0:
+            tl.ingest_arrays(DeviceActivity.KERNEL, t0s, t0s + m.kernel_s)
+        if m.memory_s > 0:
+            tl.ingest_arrays(
+                DeviceActivity.MEMORY,
+                t0s + m.kernel_s,
+                t0s + m.kernel_s + m.memory_s,
+            )
+    t = steps * period
     # Host: one rank per device group; host is Useful for host_useful_s,
     # Offload while blocked on its own device pipeline (+ gap), and in
     # MPI while waiting for slower peers.

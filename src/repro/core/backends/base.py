@@ -6,8 +6,18 @@ Each backend implements two complementary paths, mirroring §4.2:
        the monitor's ``offload()`` / ``instrument()`` scopes, which the
        backend may hook;
   (ii) asynchronous collection of device activity records, delivered in
-       batches via ``flush()`` and post-processed uniformly by the core
-       (flatten kernels → subtract overlap from memory → classify idle).
+       batches and post-processed uniformly by the core (flatten kernels
+       → subtract overlap from memory → classify idle).
+
+Delivery has two shapes. The legacy ``flush()`` yields one ``(device,
+DeviceRecord)`` pair per event — simple, but it materializes a Python
+object per activity record. The **batch path**, ``flush_arrays()``,
+yields whole activity buffers as columns ``(device, kinds, starts,
+ends, streams)`` that feed straight into
+:meth:`~repro.core.states.DeviceTimeline.ingest_arrays` with no
+per-event objects — the shape a real CUPTI activity-buffer flush has.
+:class:`~repro.core.talp.TalpMonitor` prefers ``flush_arrays`` when a
+backend provides it; implementing only ``flush`` remains valid.
 
 Backends register by name so a deployment enables whichever matches the
 runtime environment (the paper: CUPTI plugin if CUDA, rocprofiler if HIP,
@@ -20,7 +30,13 @@ from typing import Callable, Dict, Iterable, List, Protocol, Tuple, runtime_chec
 
 from ..states import DeviceRecord
 
-__all__ = ["ActivityBackend", "register_backend", "get_backend", "available_backends"]
+__all__ = [
+    "ActivityBackend",
+    "ColumnarActivityBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
 
 
 @runtime_checkable
@@ -37,6 +53,22 @@ class ActivityBackend(Protocol):
 
     def flush(self) -> Iterable[Tuple[int, DeviceRecord]]:
         """Drain buffered (device, record) pairs (≙ activity-buffer flush)."""
+        ...
+
+
+@runtime_checkable
+class ColumnarActivityBackend(ActivityBackend, Protocol):
+    """Extended protocol for backends that deliver whole column batches.
+
+    ``flush_arrays()`` drains every buffered batch as
+    ``(device, kinds, starts, ends, streams)`` tuples of equal-length
+    arrays (``streams`` may be ``None`` for stream 0). A backend
+    implementing this is never asked to materialize ``DeviceRecord``
+    objects on the hot path.
+    """
+
+    def flush_arrays(self) -> Iterable[Tuple[int, object, object, object, object]]:
+        """Drain buffered per-device column batches."""
         ...
 
 

@@ -25,10 +25,44 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Tuple
 
+import numpy as np
+
 from ..states import DeviceActivity, DeviceRecord
 from .base import register_backend
 
 __all__ = ["RuntimeBackend", "AsyncHandle"]
+
+
+class _DeviceColumns:
+    """Per-device scalar-append column buffer (kind/start/end/stream).
+
+    Append is O(1) Python-list work — no object per record; drain
+    converts to NumPy columns in one shot.
+    """
+
+    __slots__ = ("kinds", "starts", "ends", "streams")
+
+    def __init__(self):
+        self.kinds: List[int] = []
+        self.starts: List[float] = []
+        self.ends: List[float] = []
+        self.streams: List[int] = []
+
+    def append(self, kind: int, start: float, end: float, stream: int) -> None:
+        self.kinds.append(kind)
+        self.starts.append(start)
+        self.ends.append(end)
+        self.streams.append(stream)
+
+    def drain(self):
+        cols = (
+            np.asarray(self.kinds, dtype=np.uint8),
+            np.asarray(self.starts, dtype=np.float64),
+            np.asarray(self.ends, dtype=np.float64),
+            np.asarray(self.streams, dtype=np.uint32),
+        )
+        self.kinds, self.starts, self.ends, self.streams = [], [], [], []
+        return cols
 
 
 @dataclass
@@ -49,7 +83,7 @@ class RuntimeBackend:
 
     def __init__(self, clock: Callable[[], float] = time.perf_counter):
         self.clock = clock
-        self._buffer: List[Tuple[int, DeviceRecord]] = []
+        self._columns: dict = {}  # dev -> _DeviceColumns
         self._pending: List[AsyncHandle] = []
         self.enabled = False
 
@@ -63,8 +97,29 @@ class RuntimeBackend:
             self.wait(h)
         self.enabled = False
 
+    def _record(self, dev: int, kind: DeviceActivity, start: float,
+                end: float, stream: int = 0) -> None:
+        cols = self._columns.get(dev)
+        if cols is None:
+            cols = self._columns[dev] = _DeviceColumns()
+        cols.append(kind.code, start, end, stream)
+
+    def flush_arrays(self):
+        """Drain buffered activity as per-device column batches."""
+        out = [
+            (dev, *self._columns[dev].drain()) for dev in sorted(self._columns)
+        ]
+        return out
+
     def flush(self):
-        out, self._buffer = self._buffer, []
+        """Legacy object path: materialize ``DeviceRecord`` per event."""
+        out = []
+        for dev, kinds, starts, ends, streams in self.flush_arrays():
+            out.extend(
+                (dev, DeviceRecord(DeviceActivity.from_code(k), float(s),
+                                   float(e), int(st)))
+                for k, s, e, st in zip(kinds, starts, ends, streams)
+            )
         return out
 
     # -- device activity (async path) ------------------------------------
@@ -87,17 +142,9 @@ class RuntimeBackend:
         out = jax.block_until_ready(handle.out)
         handle.done_t = self.clock()
         if self.enabled:
-            self._buffer.append(
-                (
-                    handle.device,
-                    DeviceRecord(
-                        DeviceActivity.KERNEL,
-                        handle.launch_t,
-                        handle.done_t,
-                        stream=handle.stream,
-                        name=handle.name,
-                    ),
-                )
+            self._record(
+                handle.device, DeviceActivity.KERNEL,
+                handle.launch_t, handle.done_t, handle.stream,
             )
         if handle in self._pending:
             self._pending.remove(handle)
@@ -118,7 +165,5 @@ class RuntimeBackend:
         out = jax.block_until_ready(fn(*args, **kwargs))
         t1 = self.clock()
         if self.enabled:
-            self._buffer.append(
-                (device, DeviceRecord(DeviceActivity.MEMORY, t0, t1, name=name))
-            )
+            self._record(device, DeviceActivity.MEMORY, t0, t1)
         return out

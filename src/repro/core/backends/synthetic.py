@@ -14,6 +14,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
+import numpy as np
+
+from ..recordio import as_record_columns
 from ..states import DeviceActivity, DeviceRecord, HostState, Trace
 from .base import register_backend
 
@@ -135,11 +138,22 @@ class SyntheticTraceBuilder:
 
 @register_backend("synthetic")
 class SyntheticBackend:
-    """ActivityBackend that replays a pre-built record list (testing)."""
+    """ActivityBackend that replays pre-built activity (testing).
+
+    Columnar inside: events are kept as per-device ``(kind_code, start,
+    end, stream)`` column lists — no ``DeviceRecord`` objects are
+    materialized unless a consumer insists on the legacy ``flush()``
+    path. ``push_arrays`` accepts whole column batches;
+    ``flush_arrays`` drains them batch-for-batch.
+    """
 
     def __init__(self, records: Optional[Iterable[Tuple[int, DeviceRecord]]] = None):
-        self._records: List[Tuple[int, DeviceRecord]] = list(records or [])
+        # dev -> list of (kinds, starts, ends, streams) column batches
+        self._batches: Dict[int, List[Tuple[np.ndarray, np.ndarray,
+                                            np.ndarray, np.ndarray]]] = {}
         self.started = False
+        for dev, rec in records or []:
+            self.push(dev, rec)
 
     def start(self) -> None:
         self.started = True
@@ -148,8 +162,35 @@ class SyntheticBackend:
         self.started = False
 
     def push(self, dev: int, record: DeviceRecord) -> None:
-        self._records.append((dev, record))
+        """Legacy single-record entry point (wraps a one-row batch)."""
+        self.push_arrays(
+            dev,
+            np.array([record.kind.code], dtype=np.uint8),
+            np.array([record.start]),
+            np.array([record.end]),
+            np.array([record.stream], dtype=np.uint32),
+        )
+
+    def push_arrays(self, dev: int, kinds, starts, ends, streams=None) -> None:
+        """Queue one whole activity buffer for a device, as columns."""
+        cols = as_record_columns(kinds, starts, ends, streams)
+        self._batches.setdefault(dev, []).append(cols)
+
+    def flush_arrays(self):
+        """Drain queued per-device column batches (the zero-object path)."""
+        out = []
+        for dev in sorted(self._batches):
+            out.extend((dev, *cols) for cols in self._batches[dev])
+        self._batches = {}
+        return out
 
     def flush(self):
-        out, self._records = self._records, []
+        """Legacy object path: materialize ``DeviceRecord`` per event."""
+        out = []
+        for dev, kinds, starts, ends, streams in self.flush_arrays():
+            out.extend(
+                (dev, DeviceRecord(DeviceActivity.from_code(k), float(s),
+                                   float(e), int(st)))
+                for k, s, e, st in zip(kinds, starts, ends, streams)
+            )
         return out

@@ -70,7 +70,11 @@ def flatten(iv: np.ndarray) -> np.ndarray:
     # post-processing path, where most inputs were flattened upstream).
     if len(iv) == 1 or bool(np.all(iv[1:, 0] > iv[:-1, 1])):
         return iv.copy()
-    order = np.lexsort((iv[:, 1], iv[:, 0]))
+    # Sort by start only: the merged output is independent of the order
+    # of equal starts (an interval never opens a group inside its own
+    # equal-start block, since every earlier end > the shared start), so
+    # the cheaper single-key unstable sort is exact.
+    order = np.argsort(iv[:, 0], kind="quicksort")
     iv = iv[order]
     # Vectorized merge: a new group starts where start > running max of
     # previous ends.

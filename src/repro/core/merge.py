@@ -41,13 +41,17 @@ Post-mortem CLI: ``python -m repro.core.merge <spool_dir>``.
 
 from __future__ import annotations
 
+import io
 import json
 import os
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .device_metrics import DeviceMetrics
 from .hierarchy import DEVICE, HOST, StateDurations
 from .host_metrics import HostMetrics
+from .states import DeviceTimeline
 from .talp import RegionResult, TalpResult
 
 __all__ = [
@@ -56,12 +60,20 @@ __all__ = [
     "merge_samples",
     "region_result_from_dict",
     "talp_result_from_json",
+    "result_to_spool_bytes",
+    "result_from_spool_bytes",
+    "result_to_spool_json",
+    "result_from_spool_json",
+    "load_spool_payload",
     "InProcessGather",
     "FileSpoolTransport",
     "AllGatherTransport",
     "merge_spool",
     "emit_job_report",
 ]
+
+#: Version stamp of the binary spool payload (NPZ columns + JSON header).
+SPOOL_BINARY_VERSION = 1
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +229,166 @@ def talp_result_from_json(text: str) -> TalpResult:
 
 
 # ---------------------------------------------------------------------------
+# spool payloads — versioned binary (NPZ columns) + JSON (legacy/reference)
+# ---------------------------------------------------------------------------
+def _timelines_header(
+    timelines: Optional[Dict[int, DeviceTimeline]]
+) -> Tuple[Dict[str, Dict], Dict[str, np.ndarray]]:
+    """Split attached timelines into (per-device meta, named column arrays)."""
+    meta: Dict[str, Dict] = {}
+    arrays: Dict[str, np.ndarray] = {}
+    for dev, tl in sorted((timelines or {}).items()):
+        cols = tl.to_columns()
+        meta[str(dev)] = cols["meta"]
+        arrays[f"dev{dev}_pending"] = cols["pending"]
+        arrays[f"dev{dev}_kernel"] = cols["kernel"]
+        arrays[f"dev{dev}_memory"] = cols["memory"]
+    return meta, arrays
+
+
+def result_to_spool_bytes(
+    result: TalpResult,
+    timelines: Optional[Dict[int, DeviceTimeline]] = None,
+) -> bytes:
+    """Encode one rank's payload in the **binary spool format**: an NPZ
+    container whose ``header`` entry is the UTF-8 JSON report (host
+    states, region metadata — exactly the ``report.to_json`` dict, plus a
+    version stamp) and whose remaining entries are the columnar device
+    timelines (structured pending rows + flattened per-kind interval
+    arrays). A million-record rank serializes with four array writes per
+    device — no per-record encoding anywhere.
+    """
+    from .report import to_json
+
+    tl_meta, arrays = _timelines_header(timelines)
+    header = {
+        "version": SPOOL_BINARY_VERSION,
+        "format": "talp-spool",
+        "result": json.loads(to_json(result)),
+        "timelines": tl_meta,
+    }
+    buf = io.BytesIO()
+    np.savez(
+        buf,
+        header=np.frombuffer(json.dumps(header).encode("utf-8"), dtype=np.uint8),
+        **arrays,
+    )
+    return buf.getvalue()
+
+
+def result_from_spool_bytes(
+    data: bytes,
+) -> Tuple[TalpResult, Dict[int, DeviceTimeline]]:
+    """Decode :func:`result_to_spool_bytes` (metrics recomputed, exact
+    timeline state reconstruction)."""
+    with np.load(io.BytesIO(data), allow_pickle=False) as npz:
+        header = json.loads(bytes(npz["header"]).decode("utf-8"))
+        version = header.get("version")
+        if version is None or version > SPOOL_BINARY_VERSION:
+            raise ValueError(
+                f"unsupported binary spool payload version {version!r} "
+                f"(this reader supports <= {SPOOL_BINARY_VERSION})"
+            )
+        result = talp_result_from_json(json.dumps(header["result"]))
+        timelines: Dict[int, DeviceTimeline] = {}
+        for dev_s, meta in header.get("timelines", {}).items():
+            dev = int(dev_s)
+            timelines[dev] = DeviceTimeline.from_columns(
+                pending=npz[f"dev{dev}_pending"],
+                kernel=npz[f"dev{dev}_kernel"],
+                memory=npz[f"dev{dev}_memory"],
+                device=meta.get("device", dev),
+                compact_threshold=meta.get("compact_threshold", 65536),
+                n_compacted=meta.get("n_compacted", 0),
+                span=meta.get("span"),
+            )
+    return result, timelines
+
+
+def _timeline_to_json_obj(tl: DeviceTimeline) -> Dict:
+    """Per-record JSON encoding of a timeline — the retained object-path
+    reference the binary format is benchmarked against (and the shape the
+    legacy JSON spool uses when timelines are attached)."""
+    cols = tl.to_columns()
+    pending = cols["pending"]
+    return {
+        **cols["meta"],
+        "records": [
+            [int(k), float(s), float(e), int(st)]
+            for k, s, e, st in zip(
+                pending["kind"], pending["start"],
+                pending["end"], pending["stream"],
+            )
+        ],
+        "kernel": cols["kernel"].tolist(),
+        "memory": cols["memory"].tolist(),
+    }
+
+
+def _timeline_from_json_obj(d: Dict) -> DeviceTimeline:
+    recs = np.asarray(d.get("records") or np.zeros((0, 4)), dtype=np.float64)
+    recs = recs.reshape(-1, 4)
+    from .recordio import RECORD_DTYPE
+
+    pending = np.empty(len(recs), dtype=RECORD_DTYPE)
+    pending["kind"] = recs[:, 0].astype(np.uint8)
+    pending["start"] = recs[:, 1]
+    pending["end"] = recs[:, 2]
+    pending["stream"] = recs[:, 3].astype(np.uint32)
+    return DeviceTimeline.from_columns(
+        pending=pending,
+        kernel=np.asarray(d.get("kernel") or np.zeros((0, 2))).reshape(-1, 2),
+        memory=np.asarray(d.get("memory") or np.zeros((0, 2))).reshape(-1, 2),
+        device=d.get("device", 0),
+        compact_threshold=d.get("compact_threshold", 65536),
+        n_compacted=d.get("n_compacted", 0),
+        span=d.get("span"),
+    )
+
+
+def result_to_spool_json(
+    result: TalpResult,
+    timelines: Optional[Dict[int, DeviceTimeline]] = None,
+) -> str:
+    """Legacy JSON spool payload (``report.to_json`` text); attached
+    timelines are encoded per record under ``device_timelines``."""
+    from .report import to_json
+
+    if not timelines:
+        return to_json(result)
+    payload = json.loads(to_json(result))
+    payload["device_timelines"] = {
+        str(dev): _timeline_to_json_obj(tl)
+        for dev, tl in sorted(timelines.items())
+    }
+    return json.dumps(payload, indent=2)
+
+
+def result_from_spool_json(
+    text: str,
+) -> Tuple[TalpResult, Dict[int, DeviceTimeline]]:
+    result = talp_result_from_json(text)
+    payload = json.loads(text)
+    timelines = {
+        int(dev): _timeline_from_json_obj(d)
+        for dev, d in (payload.get("device_timelines") or {}).items()
+    }
+    return result, timelines
+
+
+def load_spool_payload(path: str) -> Tuple[TalpResult, Dict[int, DeviceTimeline]]:
+    """Read one spool file, auto-detecting the payload format: ``.npz``
+    files hold the versioned binary payload, anything else is parsed as
+    (legacy) JSON. Returns ``(result, timelines)``; ``timelines`` is
+    empty when the payload carries none."""
+    if path.endswith(".npz"):
+        with open(path, "rb") as f:
+            return result_from_spool_bytes(f.read())
+    with open(path) as f:
+        return result_from_spool_json(f.read())
+
+
+# ---------------------------------------------------------------------------
 # transports
 # ---------------------------------------------------------------------------
 class InProcessGather:
@@ -245,12 +417,23 @@ class InProcessGather:
 
 
 class FileSpoolTransport:
-    """Per-rank JSON spool on a shared filesystem.
+    """Per-rank spool on a shared filesystem.
 
-    Each rank writes ``talp_rank<rank>.json`` (via ``report.to_json``);
-    the merge side lists the spool, reconstructs every per-rank result and
-    merges. Post-mortem by design: the spool is the job's machine-readable
-    artifact and can be re-merged at any time.
+    Each rank writes ``talp_rank<rank>.npz`` (versioned binary payload:
+    JSON header + NPZ timeline columns, see
+    :func:`result_to_spool_bytes`) or — with ``payload="json"`` —
+    ``talp_rank<rank>.json`` (the legacy ``report.to_json`` text). The
+    merge side lists the spool, auto-detects each file's format,
+    reconstructs every per-rank result and merges; spools written by
+    older (JSON-only) producers merge unchanged. Post-mortem by design:
+    the spool is the job's machine-readable artifact and can be
+    re-merged at any time.
+
+    ``submit(..., timelines=...)`` optionally attaches raw per-device
+    :class:`DeviceTimeline` state (columnar in the binary format,
+    per-record JSON in the legacy one) so post-mortem tooling can
+    re-window or re-render the activity, not just read the reduced
+    states; :meth:`collect_timelines` reads them back.
 
     Use a fresh directory per job: leftover rank files from a previous
     run in the same directory would merge into the new report. Files
@@ -261,48 +444,88 @@ class FileSpoolTransport:
 
     PREFIX = "talp_rank"
     SAMPLE_PREFIX = "talp_sample_rank"
+    #: recognised payload extensions, in collection preference order
+    EXTS = (".npz", ".json")
 
-    def __init__(self, spool_dir: str, world_size: Optional[int] = None):
+    def __init__(self, spool_dir: str, world_size: Optional[int] = None,
+                 payload: str = "binary"):
+        if payload not in ("binary", "json"):
+            raise ValueError(f"payload must be 'binary' or 'json', got {payload!r}")
         self.spool_dir = spool_dir
         self.world_size = world_size
+        self.payload = payload
         os.makedirs(spool_dir, exist_ok=True)
 
+    @property
+    def _ext(self) -> str:
+        return ".npz" if self.payload == "binary" else ".json"
+
     def _path(self, rank: int) -> str:
-        return os.path.join(self.spool_dir, f"{self.PREFIX}{rank:05d}.json")
+        return os.path.join(self.spool_dir, f"{self.PREFIX}{rank:05d}{self._ext}")
 
     def _sample_path(self, rank: int) -> str:
-        return os.path.join(self.spool_dir, f"{self.SAMPLE_PREFIX}{rank:05d}.json")
+        return os.path.join(
+            self.spool_dir, f"{self.SAMPLE_PREFIX}{rank:05d}{self._ext}"
+        )
 
-    def _publish(self, result: TalpResult, path: str) -> str:
-        from .report import to_json
+    def _find(self, rank: int, prefix: str) -> Optional[str]:
+        for ext in self.EXTS:
+            p = os.path.join(self.spool_dir, f"{prefix}{rank:05d}{ext}")
+            if os.path.exists(p):
+                return p
+        return None
 
+    def _publish(
+        self,
+        result: TalpResult,
+        path: str,
+        timelines: Optional[Dict[int, DeviceTimeline]] = None,
+    ) -> str:
         tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            f.write(to_json(result))
-        os.replace(tmp, path)  # atomic publish: mergers never see partial JSON
+        if path.endswith(".npz"):
+            with open(tmp, "wb") as f:
+                f.write(result_to_spool_bytes(result, timelines))
+        else:
+            with open(tmp, "w") as f:
+                f.write(result_to_spool_json(result, timelines))
+        os.replace(tmp, path)  # atomic publish: mergers never see partials
         return path
 
-    def submit(self, result: TalpResult, rank: int) -> str:
-        return self._publish(result, self._path(rank))
+    def submit(
+        self,
+        result: TalpResult,
+        rank: int,
+        timelines: Optional[Dict[int, DeviceTimeline]] = None,
+    ) -> str:
+        return self._publish(result, self._path(rank), timelines)
 
-    def submit_sample(self, result: TalpResult, rank: int) -> str:
+    def submit_sample(
+        self,
+        result: TalpResult,
+        rank: int,
+        timelines: Optional[Dict[int, DeviceTimeline]] = None,
+    ) -> str:
         """Publish this rank's latest mid-run snapshot (atomically
         overwritten on every call — the spool keeps one live snapshot per
         rank, next to the post-mortem ``talp_rank*`` files)."""
-        return self._publish(result, self._sample_path(rank))
+        return self._publish(result, self._sample_path(rank), timelines)
 
     def _scan_ranks(self, prefix: str) -> List[int]:
         try:
             names = os.listdir(self.spool_dir)
         except FileNotFoundError:
             return []
-        ranks = []
+        ranks = set()
         for n in names:
-            if n.startswith(prefix) and n.endswith(".json"):
-                try:
-                    ranks.append(int(n[len(prefix):-len(".json")]))
-                except ValueError:
-                    continue
+            if not n.startswith(prefix):
+                continue
+            for ext in self.EXTS:
+                if n.endswith(ext):
+                    try:
+                        ranks.add(int(n[len(prefix):-len(ext)]))
+                    except ValueError:
+                        pass
+                    break
         return sorted(ranks)
 
     def spooled_ranks(self) -> List[int]:
@@ -336,8 +559,21 @@ class FileSpoolTransport:
         self._check_stale(ranks)
         out = []
         for rank in ranks:
-            with open(self._path(rank)) as f:
-                out.append(talp_result_from_json(f.read()))
+            path = self._find(rank, self.PREFIX)
+            if path is not None:
+                out.append(load_spool_payload(path)[0])
+        return out
+
+    def collect_timelines(self) -> Dict[int, Dict[int, DeviceTimeline]]:
+        """Raw device-timeline attachments per spooled rank (empty dicts
+        for ranks whose payload carries none)."""
+        ranks = self.spooled_ranks()
+        self._check_stale(ranks)
+        out: Dict[int, Dict[int, DeviceTimeline]] = {}
+        for rank in ranks:
+            path = self._find(rank, self.PREFIX)
+            if path is not None:
+                out[rank] = load_spool_payload(path)[1]
         return out
 
     def merge(self, name: Optional[str] = None) -> TalpResult:
@@ -355,8 +591,9 @@ class FileSpoolTransport:
         """
         out = []
         for rank in self.sampled_ranks():
-            with open(self._sample_path(rank)) as f:
-                out.append(talp_result_from_json(f.read()))
+            path = self._find(rank, self.SAMPLE_PREFIX)
+            if path is not None:
+                out.append(load_spool_payload(path)[0])
         return out
 
     def merge_samples(self, name: Optional[str] = None) -> TalpResult:
@@ -428,7 +665,8 @@ class AllGatherTransport:
 
 
 def merge_spool(spool_dir: str, name: Optional[str] = None) -> TalpResult:
-    """One-shot post-mortem merge of a rank spool directory."""
+    """One-shot post-mortem merge of a rank spool directory (reads binary
+    and legacy JSON payloads alike)."""
     return FileSpoolTransport(spool_dir).merge(name=name)
 
 
@@ -438,6 +676,8 @@ def emit_job_report(
     rank: int,
     world_size: int,
     verbose: bool = True,
+    payload: str = "binary",
+    timelines: Optional[Dict[int, DeviceTimeline]] = None,
 ) -> Optional[TalpResult]:
     """Launcher-side helper: spool this rank's report; once all ranks are
     in, merge and publish ``<spool_dir>/talp_job.json``.
@@ -446,12 +686,15 @@ def emit_job_report(
     idempotent and the job file is published atomically (tmp +
     ``os.replace``), so concurrent writers are safe — readers only ever
     see a complete report. Returns the job result on the rank(s) that
-    merged, ``None`` elsewhere.
+    merged, ``None`` elsewhere. The merged ``talp_job.json`` is always
+    JSON (the job-level artifact stays human-readable); ``payload``
+    selects the per-rank spool format.
     """
     from .report import render_tables, to_json
 
-    transport = FileSpoolTransport(spool_dir, world_size=world_size)
-    transport.submit(result, rank=rank)
+    transport = FileSpoolTransport(spool_dir, world_size=world_size,
+                                   payload=payload)
+    transport.submit(result, rank=rank, timelines=timelines)
     if not transport.ready():
         return None
     job = transport.merge(name=result.name)
@@ -494,8 +737,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ranks = transport.sampled_ranks() if args.samples else transport.spooled_ranks()
     if not ranks:
         print(
-            f"error: no {pattern}*.json files found in {args.spool_dir!r}; "
-            "nothing to merge",
+            f"error: no {pattern}*.json or {pattern}*.npz files found in "
+            f"{args.spool_dir!r}; nothing to merge",
             file=sys.stderr,
         )
         sys.exit(2)

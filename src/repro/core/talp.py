@@ -236,10 +236,28 @@ class TalpMonitor:
     ) -> None:
         self.device(dev).add(kind, start, end, stream, name)
 
+    def ingest_device_arrays(
+        self, dev: int, kinds, starts, ends, streams=None
+    ) -> int:
+        """Batch entry point: deliver one whole activity buffer for a
+        device as columns (see :meth:`DeviceTimeline.ingest_arrays`)."""
+        return self.device(dev).ingest_arrays(kinds, starts, ends, streams)
+
     def _flush_backend(self) -> None:
-        if self.backend is not None and hasattr(self.backend, "flush"):
-            for dev, rec in self.backend.flush():
-                self.device(dev).extend((rec,))
+        be = self.backend
+        if be is None:
+            return
+        if hasattr(be, "flush_arrays"):
+            # Columnar path: whole activity buffers, zero per-event objects.
+            for dev, kinds, starts, ends, streams in be.flush_arrays():
+                self.device(dev).ingest_arrays(kinds, starts, ends, streams)
+        elif hasattr(be, "flush"):
+            # Legacy object path: batch per device before ingesting.
+            by_dev: Dict[int, List] = {}
+            for dev, rec in be.flush():
+                by_dev.setdefault(dev, []).append(rec)
+            for dev, recs in by_dev.items():
+                self.device(dev).ingest(recs)
 
     # ------------------------------------------------------------------
     # Transparent instrumentation

@@ -45,6 +45,7 @@ def serve(
     world_size: int = 1,
     talp_spool: str = None,
     talp_sample_every: int = 0,
+    talp_spool_format: str = "binary",
 ):
     """Serve a batch of requests. Multi-rank serving fleets: pass
     ``rank``/``world_size`` and a shared ``talp_spool`` dir to get one
@@ -54,7 +55,8 @@ def serve(
     backend = RuntimeBackend()
     mon = TalpMonitor("serve", rank=rank, backend=backend)
     sample_transport = (
-        FileSpoolTransport(talp_spool, world_size=world_size)
+        FileSpoolTransport(talp_spool, world_size=world_size,
+                           payload=talp_spool_format)
         if talp_spool and talp_sample_every else None
     )
 
@@ -125,7 +127,8 @@ def serve(
         with open(talp_json, "w") as f:
             f.write(to_json(result))
     if talp_spool:
-        emit_job_report(result, talp_spool, rank, world_size, verbose=verbose)
+        emit_job_report(result, talp_spool, rank, world_size, verbose=verbose,
+                        payload=talp_spool_format, timelines=mon.devices)
     return np.stack(tokens_out, axis=1), result
 
 
@@ -142,6 +145,10 @@ def main():
                          "and (with --talp-spool) merge a job-level report")
     ap.add_argument("--talp-spool", default=None,
                     help="shared dir for per-rank reports + job-level merge")
+    ap.add_argument("--talp-spool-format", choices=("binary", "json"),
+                    default="binary",
+                    help="spool payload: versioned binary .npz (default) "
+                         "or legacy JSON")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     args = ap.parse_args()
@@ -150,7 +157,8 @@ def main():
     tokens, _ = serve(cfg, args.requests, args.prompt_len, args.gen_len,
                       talp_json=args.talp_json, rank=args.rank,
                       world_size=args.world_size, talp_spool=args.talp_spool,
-                      talp_sample_every=args.talp_sample_every)
+                      talp_sample_every=args.talp_sample_every,
+                      talp_spool_format=args.talp_spool_format)
     dt = time.time() - t0
     n = tokens.size
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

@@ -60,6 +60,7 @@ def train(
     world_size: int = 1,
     talp_spool: str = None,
     talp_sample_every: int = 0,
+    talp_spool_format: str = "binary",
 ):
     """Train a (usually reduced) config; returns (state, history, talp).
 
@@ -78,7 +79,8 @@ def train(
     backend = RuntimeBackend()
     mon = TalpMonitor("train", rank=rank, backend=backend)
     sample_transport = (
-        FileSpoolTransport(talp_spool, world_size=world_size)
+        FileSpoolTransport(talp_spool, world_size=world_size,
+                           payload=talp_spool_format)
         if talp_spool and talp_sample_every else None
     )
 
@@ -168,7 +170,8 @@ def train(
         with open(talp_json, "w") as f:
             f.write(to_json(result))
     if talp_spool:
-        emit_job_report(result, talp_spool, rank, world_size, verbose=verbose)
+        emit_job_report(result, talp_spool, rank, world_size, verbose=verbose,
+                        payload=talp_spool_format, timelines=mon.devices)
     return state, history, result
 
 
@@ -189,6 +192,10 @@ def main():
     ap.add_argument("--talp-json", default=None)
     ap.add_argument("--talp-spool", default=None,
                     help="shared dir for per-rank reports + job-level merge")
+    ap.add_argument("--talp-spool-format", choices=("binary", "json"),
+                    default="binary",
+                    help="spool payload: versioned binary .npz (default) "
+                         "or legacy JSON")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     ap.add_argument("--history-json", default=None)
@@ -208,6 +215,7 @@ def main():
         world_size=args.world_size,
         talp_spool=args.talp_spool,
         talp_sample_every=args.talp_sample_every,
+        talp_spool_format=args.talp_spool_format,
     )
     if args.history_json:
         with open(args.history_json, "w") as f:

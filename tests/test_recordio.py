@@ -1,0 +1,345 @@
+"""Columnar record engine tests.
+
+Covers the zero-object record path end to end: the ``ColumnStore``
+structured buffer, column coercion/validation, the ``DeviceTimeline``
+batch API, cache/regression fixes on the ingest path, equivalence of the
+columnar and retained object paths (unit + property), the binary spool
+payload, and the backend ``flush_arrays`` protocol.
+"""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.merge import (
+    FileSpoolTransport,
+    load_spool_payload,
+    merge_results,
+    result_from_spool_bytes,
+    result_to_spool_bytes,
+    result_to_spool_json,
+)
+from repro.core.recordio import (
+    KIND_KERNEL,
+    KIND_MEMORY,
+    RECORD_DTYPE,
+    ColumnStore,
+    as_record_columns,
+)
+from repro.core.report import to_json
+from repro.core.states import (
+    DeviceActivity,
+    DeviceRecord,
+    DeviceTimeline,
+    ObjectPathTimeline,
+)
+from repro.core.talp import TalpMonitor
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# ColumnStore
+# ---------------------------------------------------------------------------
+def test_column_store_append_and_growth():
+    cs = ColumnStore(capacity=16)
+    for i in range(100):  # force several doublings
+        cs.append(KIND_KERNEL, float(i), float(i) + 0.5, i % 4)
+    assert len(cs) == 100
+    v = cs.view()
+    assert v.dtype == RECORD_DTYPE
+    np.testing.assert_allclose(v["start"], np.arange(100.0))
+    np.testing.assert_allclose(v["end"], np.arange(100.0) + 0.5)
+    assert v["stream"][5] == 1
+
+
+def test_column_store_extend_take_clear():
+    cs = ColumnStore()
+    kinds = np.array([KIND_KERNEL, KIND_MEMORY], dtype=np.uint8)
+    n = cs.extend_columns(kinds, np.array([0.0, 1.0]), np.array([0.5, 2.0]))
+    assert n == 2 and len(cs) == 2
+    taken = cs.take()
+    assert len(cs) == 0
+    assert taken["kind"].tolist() == [KIND_KERNEL, KIND_MEMORY]
+    cs.append(KIND_KERNEL, 0.0, 1.0)
+    cs.clear()
+    assert len(cs) == 0
+
+
+def test_as_record_columns_validation():
+    with pytest.raises(ValueError):  # length mismatch
+        as_record_columns(KIND_KERNEL, [0.0, 1.0], [0.5])
+    with pytest.raises(ValueError):  # end < start
+        as_record_columns(KIND_KERNEL, [1.0], [0.5])
+    # DeviceActivity values coerce to codes; scalar kind broadcasts
+    kinds, starts, ends, streams = as_record_columns(
+        [DeviceActivity.KERNEL, DeviceActivity.MEMORY], [0, 1], [1, 2]
+    )
+    assert kinds.tolist() == [KIND_KERNEL, KIND_MEMORY]
+    assert streams.tolist() == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# ingest() chunk_size regression (satellite: `chunk_size or ...` truthiness)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", [DeviceTimeline, ObjectPathTimeline])
+@pytest.mark.parametrize("bad", [0, -1])
+def test_ingest_rejects_non_positive_chunk_size(cls, bad):
+    tl = cls(device=0)
+    recs = [DeviceRecord(DeviceActivity.KERNEL, 0.0, 1.0)]
+    with pytest.raises(ValueError, match="chunk_size"):
+        tl.ingest(recs, chunk_size=bad)
+    # chunk_size=None (default) and explicit positive both work
+    assert tl.ingest(recs) == 1
+    assert tl.ingest(recs, chunk_size=1) == 1
+
+
+# ---------------------------------------------------------------------------
+# kind_intervals() caching (satellite: O(pending) re-scan per call)
+# ---------------------------------------------------------------------------
+def test_kind_intervals_cached_between_mutations():
+    tl = DeviceTimeline(device=0, compact_threshold=1024)
+    tl.add(DeviceActivity.KERNEL, 0.0, 1.0)
+    tl.add(DeviceActivity.MEMORY, 0.5, 2.0)
+    a = tl.kind_intervals(DeviceActivity.KERNEL)
+    b = tl.kind_intervals(DeviceActivity.KERNEL)
+    assert a is b  # cache hit: no pending-buffer re-scan
+    tl.add(DeviceActivity.KERNEL, 3.0, 4.0)
+    c = tl.kind_intervals(DeviceActivity.KERNEL)
+    assert c is not a
+    np.testing.assert_allclose(c, [[0.0, 1.0], [3.0, 4.0]])
+    tl.compact()  # compaction invalidates the cache
+    d = tl.kind_intervals(DeviceActivity.KERNEL)
+    np.testing.assert_allclose(d, c)
+
+
+# ---------------------------------------------------------------------------
+# batch API
+# ---------------------------------------------------------------------------
+def test_ingest_arrays_matches_add():
+    a = DeviceTimeline(device=0)
+    b = DeviceTimeline(device=0)
+    starts = np.array([0.0, 1.0, 0.5, 4.0])
+    ends = starts + np.array([0.8, 0.2, 1.0, 0.1])
+    kinds = [DeviceActivity.KERNEL, DeviceActivity.MEMORY,
+             DeviceActivity.KERNEL, DeviceActivity.MEMORY]
+    n = a.ingest_arrays(kinds, starts, ends)
+    assert n == 4
+    for k, s, e in zip(kinds, starts, ends):
+        b.add(k, s, e)
+    for kind in (DeviceActivity.KERNEL, DeviceActivity.MEMORY):
+        np.testing.assert_array_equal(
+            a.kind_intervals(kind), b.kind_intervals(kind)
+        )
+    assert a.span() == b.span()
+
+
+def test_ingest_arrays_chunks_across_compact_threshold():
+    tl = DeviceTimeline(device=0, compact_threshold=8)
+    starts = np.arange(100.0)
+    tl.ingest_arrays(DeviceActivity.KERNEL, starts, starts + 0.5)
+    assert tl.n_records == 100
+    assert tl.n_pending <= 8  # ingest slices at the compaction threshold
+    assert tl.kind_intervals(DeviceActivity.KERNEL).shape == (100, 2)
+
+
+# ---------------------------------------------------------------------------
+# columnar vs object path — property test
+# ---------------------------------------------------------------------------
+@st.composite
+def record_streams(draw, max_n=40, t_max=50.0):
+    n = draw(st.integers(0, max_n))
+    recs = []
+    for _ in range(n):
+        kind = draw(st.sampled_from([DeviceActivity.KERNEL,
+                                     DeviceActivity.MEMORY]))
+        a = draw(st.floats(0, t_max, allow_nan=False, allow_infinity=False))
+        w = draw(st.floats(0, 5.0, allow_nan=False, allow_infinity=False))
+        stream = draw(st.integers(0, 3))
+        recs.append((kind, a, a + w, stream))
+    return recs
+
+
+@settings(max_examples=60, deadline=None)
+@given(recs=record_streams(), threshold=st.integers(1, 16),
+       interleave=st.booleans())
+def test_columnar_equals_object_path(recs, threshold, interleave):
+    """The columnar engine and the retained object-path reference produce
+    identical compacted intervals and spans for arbitrary streams,
+    including interleaved compact() calls and kinds with no records."""
+    col = DeviceTimeline(device=0, compact_threshold=threshold)
+    obj = ObjectPathTimeline(device=0, compact_threshold=threshold)
+    for i, (kind, s, e, stream) in enumerate(recs):
+        col.add(kind, s, e, stream=stream)
+        obj.add(kind, s, e, stream=stream)
+        if interleave and i % 3 == 0:
+            col.compact()
+            obj.compact()
+    assert col.n_records == obj.n_records == len(recs)
+    for kind in (DeviceActivity.KERNEL, DeviceActivity.MEMORY):
+        np.testing.assert_array_equal(
+            col.kind_intervals(kind), obj.kind_intervals(kind),
+            err_msg=f"kind={kind}",
+        )
+    assert col.span() == obj.span()
+
+
+@settings(max_examples=25, deadline=None)
+@given(recs=record_streams(max_n=25))
+def test_columnar_region_metrics_equal_object_path(recs):
+    """Per-region metric trees are bit-identical whether device activity
+    flows through the columnar engine or the object-path reference."""
+
+    def run(timeline_cls):
+        clk = FakeClock()
+        mon = TalpMonitor("prop", clock=clk)
+        mon.devices[0] = timeline_cls(device=0, compact_threshold=7)
+        with mon.region("step"):
+            clk.advance(2.0)
+            with mon.offload():
+                clk.advance(3.0)
+        for kind, s, e, stream in recs:
+            mon.devices[0].add(kind, s, e, stream=stream)
+        return mon.finalize()
+
+    a, b = run(DeviceTimeline), run(ObjectPathTimeline)
+    assert to_json(a) == to_json(b)
+
+
+# ---------------------------------------------------------------------------
+# binary spool payload
+# ---------------------------------------------------------------------------
+def _result_with_devices(rank=0):
+    clk = FakeClock()
+    mon = TalpMonitor(f"rank{rank}", rank=rank, clock=clk)
+    with mon.region("step"):
+        clk.advance(1.0)
+        with mon.offload():
+            clk.advance(2.0)
+    mon.add_device_record(0, DeviceActivity.KERNEL, 0.0, 1.5)
+    mon.add_device_record(0, DeviceActivity.MEMORY, 1.0, 2.5)
+    mon.add_device_record(1, DeviceActivity.KERNEL, 0.5, 2.0)
+    return mon.finalize(), mon.devices
+
+
+def test_spool_bytes_round_trip_with_timelines():
+    result, devices = _result_with_devices()
+    blob = result_to_spool_bytes(result, timelines=devices)
+    back, timelines = result_from_spool_bytes(blob)
+    assert to_json(back) == to_json(result)
+    assert sorted(timelines) == [0, 1]
+    for dev, tl in timelines.items():
+        for kind in (DeviceActivity.KERNEL, DeviceActivity.MEMORY):
+            np.testing.assert_array_equal(
+                tl.kind_intervals(kind), devices[dev].kind_intervals(kind)
+            )
+        assert tl.span() == devices[dev].span()
+
+
+def test_spool_bytes_rejects_future_version():
+    result, _ = _result_with_devices()
+    blob = result_to_spool_bytes(result)
+    # Rewrite the header with a bumped version field.
+    import io
+
+    with np.load(io.BytesIO(blob)) as z:
+        header = json.loads(bytes(z["header"].tobytes()).decode("utf-8"))
+        arrays = {k: z[k] for k in z.files if k != "header"}
+    header["version"] = 99
+    raw = json.dumps(header).encode("utf-8")
+    buf = io.BytesIO()
+    np.savez(buf, header=np.frombuffer(raw, dtype=np.uint8), **arrays)
+    with pytest.raises(ValueError, match="version"):
+        result_from_spool_bytes(buf.getvalue())
+
+
+def test_binary_and_json_spools_merge_identically(tmp_path):
+    bdir, jdir = tmp_path / "bin", tmp_path / "json"
+    bdir.mkdir(), jdir.mkdir()
+    bspool = FileSpoolTransport(str(bdir), world_size=3, payload="binary")
+    jspool = FileSpoolTransport(str(jdir), world_size=3, payload="json")
+    per_rank = []
+    for r in range(3):
+        res, devs = _result_with_devices(rank=r)
+        per_rank.append(res)
+        bspool.submit(res, rank=r, timelines=devs)
+        jspool.submit(res, rank=r)  # legacy JSON, no timeline columns
+    assert all(p.suffix == ".npz" for p in bdir.glob("talp_rank*.*"))
+    assert all(p.suffix == ".json" for p in jdir.glob("talp_rank*.*"))
+    merged_b = merge_results(bspool.collect())
+    merged_j = merge_results(jspool.collect())
+    ref = merge_results(per_rank)
+    for merged in (merged_b, merged_j):
+        assert to_json(merged) == to_json(ref)
+    # Binary spools also carry the raw device timelines.
+    tls = bspool.collect_timelines()
+    assert sorted(tls) == [0, 1, 2] and sorted(tls[0]) == [0, 1]
+
+
+def test_load_spool_payload_legacy_json(tmp_path):
+    """A pre-binary spool file (plain JSON, no device_timelines key) still
+    loads and merges unchanged."""
+    result, _ = _result_with_devices()
+    path = tmp_path / "talp_rank00000.json"
+    obj = json.loads(to_json(result))  # exactly what the legacy transport wrote
+    path.write_text(json.dumps(obj))
+    back, timelines = load_spool_payload(str(path))
+    assert timelines == {}
+    assert to_json(back) == to_json(result)
+    # and the new writer without timelines is byte-compatible with legacy
+    assert json.loads(result_to_spool_json(result)) == obj
+
+
+def test_merge_cli_reads_binary_spool(tmp_path):
+    spool = FileSpoolTransport(str(tmp_path), world_size=2, payload="binary")
+    for r in range(2):
+        res, devs = _result_with_devices(rank=r)
+        spool.submit(res, rank=r, timelines=devs)
+    out = tmp_path / "job.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.merge", str(tmp_path),
+         "--json-out", str(out)],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    job = json.loads(out.read_text())
+    assert "step" in job.get("regions", job)
+
+
+# ---------------------------------------------------------------------------
+# backend flush_arrays protocol
+# ---------------------------------------------------------------------------
+def test_monitor_prefers_columnar_backend_flush():
+    from repro.core.backends.base import ColumnarActivityBackend
+    from repro.core.backends.synthetic import SyntheticBackend
+
+    be = SyntheticBackend()
+    assert isinstance(be, ColumnarActivityBackend)
+    clk = FakeClock()
+    mon = TalpMonitor(clock=clk, backend=be)
+    with mon.region("step"):
+        clk.advance(1.0)
+    starts = np.array([0.0, 0.3])
+    be.push_arrays(0, np.array([KIND_KERNEL, KIND_MEMORY], dtype=np.uint8),
+                   starts, starts + 0.25)
+    result = mon.finalize()
+    tl = mon.devices[0]
+    assert tl.n_records == 2
+    np.testing.assert_allclose(
+        tl.kind_intervals(DeviceActivity.KERNEL), [[0.0, 0.25]]
+    )
+    assert "step" in result.regions
