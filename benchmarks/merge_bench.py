@@ -13,13 +13,17 @@ trajectory. Exits nonzero if any perf gate misses its target:
   * columnar ingestion+compaction ≥ ``--ingest-target-speedup``× the
     retained object-per-record reference (bit-identical merged reports);
   * binary spool round trip ≥ ``--spool-target-speedup``× the JSON
-    per-record payload.
+    per-record payload;
+  * vectorized Chrome trace export ≥ ``--export-target-speedup``× the
+    retained per-event reference exporter (identical parsed events,
+    output passes the structural validator).
 
 Usage:
   PYTHONPATH=src python benchmarks/merge_bench.py [--ranks 64] \
       [--sample-records 100000] [--sample-target-speedup 5] \
       [--ingest-records 100000] [--ingest-target-speedup 10] \
-      [--spool-target-speedup 5] [--json out.json]
+      [--spool-target-speedup 5] [--export-records 100000] \
+      [--export-target-speedup 5] [--json out.json]
 """
 
 from __future__ import annotations
@@ -209,6 +213,53 @@ def bench_ingest_throughput(n_records: int, target_speedup: float) -> bool:
     return speedup >= target_speedup
 
 
+def bench_trace_export(n_records: int, target_speedup: float) -> bool:
+    """Chrome trace export of an n_records columnar timeline: the
+    vectorized whole-array line generator vs the retained per-event
+    reference exporter. The gate also requires the two event streams to
+    parse identically and the output to pass the structural validator."""
+    from repro.core.states import HostTimeline, Trace
+    from repro.core.telemetry.traceexport import (
+        export_trace,
+        export_trace_reference,
+        validate_chrome_trace,
+    )
+
+    kinds, starts, ends, streams = _random_columns(n_records, seed=2)
+    tl = DeviceTimeline(device=0)
+    tl.ingest_arrays(kinds, starts, ends, streams)
+    tl.compact()
+    elapsed = float(ends[-1])
+    trace = Trace(
+        name="export-bench",
+        hosts={0: HostTimeline(rank=0, useful=elapsed * 0.6,
+                               offload=elapsed * 0.3, mpi=elapsed * 0.1)},
+        devices={0: tl},
+        window=(0.0, elapsed),
+    )
+    n_slices = sum(
+        len(tl.kind_intervals(k))
+        for k in (DeviceActivity.KERNEL, DeviceActivity.MEMORY)
+    )
+
+    us_ref = _bench(lambda: export_trace_reference(trace), n_iter=3)
+    us_vec = _bench(lambda: export_trace(trace), n_iter=3)
+    speedup = us_ref / us_vec if us_vec > 0 else float("inf")
+    _row(f"trace_export_reference_{n_records}", us_ref,
+         f"{n_slices} slices baseline")
+    _row(f"trace_export_vectorized_{n_records}", us_vec,
+         f"{n_slices / (us_vec / 1e6) / 1e6:.1f}M slices/s "
+         f"{speedup:.1f}x vs reference (target {target_speedup:.1f}x)")
+
+    vec, ref = export_trace(trace), export_trace_reference(trace)
+    if json.loads(vec)["traceEvents"] != json.loads(ref)["traceEvents"]:
+        print("FAIL: vectorized and reference trace exports differ",
+              file=sys.stderr)
+        return False
+    validate_chrome_trace(vec)
+    return speedup >= target_speedup
+
+
 def bench_spool_payload(n_records: int, target_speedup: float) -> bool:
     """Spool round trip (serialize + parse) with raw device timelines
     attached: versioned binary NPZ payload vs per-record JSON."""
@@ -259,6 +310,8 @@ def main() -> int:
     ap.add_argument("--ingest-target-speedup", type=float, default=10.0)
     ap.add_argument("--spool-records", type=int, default=100_000)
     ap.add_argument("--spool-target-speedup", type=float, default=5.0)
+    ap.add_argument("--export-records", type=int, default=100_000)
+    ap.add_argument("--export-target-speedup", type=float, default=5.0)
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write the rows as a BENCH_talp.json trajectory")
     args = ap.parse_args()
@@ -314,6 +367,10 @@ def main() -> int:
     if not bench_spool_payload(args.spool_records,
                                args.spool_target_speedup):
         print("FAIL: binary spool speedup below target", file=sys.stderr)
+        rc = 1
+    if not bench_trace_export(args.export_records,
+                              args.export_target_speedup):
+        print("FAIL: trace export speedup below target", file=sys.stderr)
         rc = 1
     if args.json:
         with open(args.json, "w") as f:

@@ -4,6 +4,8 @@
 2. Compute the paper's host + device efficiency hierarchies (eqs. 6-12).
 3. Render the paper-style text report and JSON.
 4. Monitor *live* JAX execution with TalpMonitor (CUPTI-analogue).
+5. Export the monitored run as a Chrome/Perfetto trace (open it at
+   ui.perfetto.dev) and validate it structurally.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -52,3 +54,17 @@ print(render_tables(result))
 print()
 print("JSON output (truncated):")
 print(to_json(result)[:400], "...")
+
+# --- 5: Chrome/Perfetto trace export ---------------------------------------
+# The same monitored run as a trace-event file: host/device lanes, exact
+# region markers, and (with a TelemetryExporter attached) counter tracks
+# of the sampled hierarchy metrics. Drop it on ui.perfetto.dev.
+from repro.core.telemetry.traceexport import export_monitor, validate_chrome_trace
+
+trace_json = export_monitor(mon, result=result)
+summary = validate_chrome_trace(trace_json)   # same checker tests/CI use
+with open("/tmp/quickstart_trace.json", "w") as f:
+    f.write(trace_json)
+print()
+print(f"wrote Chrome trace: /tmp/quickstart_trace.json "
+      f"({summary['n_events']} events, lanes {summary['lanes']})")

@@ -12,9 +12,12 @@ Public API:
   * monitor: :class:`TalpMonitor`
   * analysis/report: :func:`analyze_trace`, :mod:`repro.core.report`
   * backends: synthetic / runtime / analytical plugins
+  * observability: :mod:`repro.core.telemetry` (Chrome/Perfetto trace
+    export, JSONL/Prometheus metric stream, self-overhead accounting)
 """
 
 from . import intervals
+from . import telemetry
 from .analysis import TraceAnalysis, analyze_trace
 from .device_metrics import DeviceMetrics, device_metrics
 from .hierarchy import (
@@ -54,6 +57,7 @@ from .tree import MetricNode, device_tree, host_tree, tree_from_frame
 
 __all__ = [
     "intervals",
+    "telemetry",
     "TraceAnalysis",
     "analyze_trace",
     "DeviceMetrics",

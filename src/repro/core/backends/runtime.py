@@ -28,6 +28,7 @@ from typing import Any, Callable, List, Optional, Tuple
 import numpy as np
 
 from ..states import DeviceActivity, DeviceRecord
+from ..telemetry import overhead as _ovh
 from .base import register_backend
 
 __all__ = ["RuntimeBackend", "AsyncHandle"]
@@ -106,10 +107,12 @@ class RuntimeBackend:
 
     def flush_arrays(self):
         """Drain buffered activity as per-device column batches."""
-        out = [
-            (dev, *self._columns[dev].drain()) for dev in sorted(self._columns)
-        ]
-        return out
+        with _ovh.section("flush"):
+            out = [
+                (dev, *self._columns[dev].drain())
+                for dev in sorted(self._columns)
+            ]
+            return out
 
     def flush(self):
         """Legacy object path: materialize ``DeviceRecord`` per event."""

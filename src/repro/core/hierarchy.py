@@ -451,6 +451,16 @@ HOST = Hierarchy(
                     float(np.sum(sd.useful)), float(np.sum(sd.host_work))
                 ),
             ),
+            # TALP self-cost as a fraction of wall-clock — the paper's
+            # "lightweight monitoring" claim, measured (fed through
+            # ``extras`` by the monitor's overhead accumulator; absent
+            # unless self-accounting is enabled).
+            MetricSpec(
+                "talp_overhead", "TALP Overhead",
+                lambda sd, dep: sd.extras.get("talp_overhead"),
+                multiplicative=False,
+                optional=True,
+            ),
         ),
     ),
 )

@@ -39,6 +39,8 @@ class HostMetrics:
     device_offload_efficiency: float  # eq. (8)
     elapsed: float
     n_processes: int
+    # optional annotation: monitor self-cost fraction (absent → None)
+    talp_overhead: Optional[float] = None
 
     @classmethod
     def from_frame(cls, frame: MetricFrame) -> "HostMetrics":
@@ -59,10 +61,13 @@ def host_metrics(
     offload: Sequence[float],
     mpi: Optional[Sequence[float]] = None,
     elapsed: Optional[float] = None,
+    talp_overhead: Optional[float] = None,
 ) -> HostMetrics:
     """Compute eqs. (6)–(8) plus the MPI-PE children.
 
     ``elapsed`` defaults to paper eq. (1) over the three-state totals.
+    ``talp_overhead`` (monitor self-cost fraction of wall-clock) feeds
+    the optional annotation node of the same name.
     """
     u = np.asarray(useful, dtype=np.float64)
     w = np.asarray(offload, dtype=np.float64)
@@ -77,5 +82,8 @@ def host_metrics(
         elapsed = elapsed_time(u, w + m)
     if elapsed <= 0:
         raise ValueError("elapsed must be positive")
-    sd = StateDurations(elapsed=float(elapsed), useful=u, offload=w, mpi=mpi)
+    extras = {} if talp_overhead is None else {"talp_overhead": float(talp_overhead)}
+    sd = StateDurations(
+        elapsed=float(elapsed), useful=u, offload=w, mpi=mpi, extras=extras
+    )
     return HostMetrics.from_frame(HOST.compute(sd))

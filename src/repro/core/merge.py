@@ -27,16 +27,21 @@ Three transports move the per-rank payloads to the merge point:
 
   * :class:`InProcessGather` — ranks in one process (tests, simulated
     multi-rank runs, threads).
-  * :class:`FileSpoolTransport` — each rank spools its JSON report
-    (``report.to_json``) to a shared directory; any process can merge the
-    spool post mortem. This is TALP's "machine-readable output enabling
-    automated processing" path, and works across nodes on a shared FS.
+  * :class:`FileSpoolTransport` — each rank spools its payload to a
+    shared directory: the versioned binary format by default
+    (``talp_rank*.npz``: JSON header + NPZ timeline columns) or the
+    legacy ``report.to_json`` text (``talp_rank*.json``); the merge side
+    auto-detects either. Any process can merge the spool post mortem —
+    TALP's "machine-readable output enabling automated processing" path,
+    across nodes on a shared FS.
   * :class:`AllGatherTransport` — a ``jax.distributed``-style collective:
     with multiple initialized JAX processes the JSON payloads are
     exchanged via ``process_allgather`` so every rank obtains the job
     result; on a single process it degenerates to a local merge.
 
-Post-mortem CLI: ``python -m repro.core.merge <spool_dir>``.
+Post-mortem CLI: ``python -m repro.core.merge <spool_dir>`` (add
+``--trace-out job.trace.json`` for a job-level Chrome/Perfetto trace
+built from the merged result and any raw timeline attachments).
 """
 
 from __future__ import annotations
@@ -53,6 +58,7 @@ from .hierarchy import DEVICE, HOST, StateDurations
 from .host_metrics import HostMetrics
 from .states import DeviceTimeline
 from .talp import RegionResult, TalpResult
+from .telemetry import overhead as _ovh
 
 __all__ = [
     "merge_region_results",
@@ -80,11 +86,14 @@ SPOOL_BINARY_VERSION = 1
 # core merge — metrics recomputed through the hierarchy engine
 # ---------------------------------------------------------------------------
 def _recompute_host(
-    host_states: Dict[int, Dict[str, float]], elapsed: float
+    host_states: Dict[int, Dict[str, float]], elapsed: float,
+    extras: Optional[Dict[str, float]] = None,
 ) -> Optional[HostMetrics]:
     if not host_states or elapsed <= 0:
         return None
-    sd = StateDurations.from_states(host_states=host_states, elapsed=elapsed)
+    sd = StateDurations.from_states(
+        host_states=host_states, elapsed=elapsed, extras=extras
+    )
     return HostMetrics.from_frame(HOST.compute(sd))
 
 
@@ -132,12 +141,22 @@ def merge_region_results(
             }
             gid += 1
 
+    # Self-overhead annotation: a wall-clock fraction does not compose
+    # additively across ranks; the conservative job-level statement is
+    # the worst rank's fraction (max-carry — absent unless some rank
+    # measured it).
+    overheads = [
+        ov for ov in (getattr(p.host, "talp_overhead", None) for p in parts)
+        if ov is not None
+    ]
+    extras = {"talp_overhead": max(overheads)} if overheads else None
+
     return RegionResult(
         name=name,
         elapsed=elapsed,
         n_ranks=len(host_states),
         n_devices=len(device_states),
-        host=_recompute_host(host_states, elapsed),
+        host=_recompute_host(host_states, elapsed, extras=extras),
         device=_recompute_device(device_states, elapsed),
         host_states=host_states,
         device_states=device_states,
@@ -200,12 +219,17 @@ def region_result_from_dict(d: Dict, name: Optional[str] = None) -> RegionResult
         int(dev): {k: float(v) for k, v in st.items()}
         for dev, st in (d.get("device_states") or {}).items()
     }
+    # talp_overhead is a measurement (the producer's self-cost), not a
+    # derivable metric — it is the one host value trusted from the
+    # payload rather than recomputed.
+    ov = (d.get("host_metrics") or {}).get("talp_overhead")
+    extras = {"talp_overhead": float(ov)} if ov is not None else None
     return RegionResult(
         name=name,
         elapsed=elapsed,
         n_ranks=len(host_states),
         n_devices=len(device_states),
-        host=_recompute_host(host_states, elapsed),
+        host=_recompute_host(host_states, elapsed, extras=extras),
         device=_recompute_device(device_states, elapsed),
         host_states=host_states,
         device_states=device_states,
@@ -481,15 +505,16 @@ class FileSpoolTransport:
         path: str,
         timelines: Optional[Dict[int, DeviceTimeline]] = None,
     ) -> str:
-        tmp = path + ".tmp"
-        if path.endswith(".npz"):
-            with open(tmp, "wb") as f:
-                f.write(result_to_spool_bytes(result, timelines))
-        else:
-            with open(tmp, "w") as f:
-                f.write(result_to_spool_json(result, timelines))
-        os.replace(tmp, path)  # atomic publish: mergers never see partials
-        return path
+        with _ovh.section("spool"):
+            tmp = path + ".tmp"
+            if path.endswith(".npz"):
+                with open(tmp, "wb") as f:
+                    f.write(result_to_spool_bytes(result, timelines))
+            else:
+                with open(tmp, "w") as f:
+                    f.write(result_to_spool_json(result, timelines))
+            os.replace(tmp, path)  # atomic publish: mergers never see partials
+            return path
 
     def submit(
         self,
@@ -717,13 +742,21 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         description="Merge a per-rank TALP spool into the job-level report."
     )
-    ap.add_argument("spool_dir", help="directory of talp_rank*.json files")
+    ap.add_argument("spool_dir",
+                    help="directory of talp_rank*.npz (binary, default "
+                         "producer format) and/or talp_rank*.json (legacy) "
+                         "spool files; formats are auto-detected and mix "
+                         "freely")
     ap.add_argument("--name", default=None, help="job name for the report")
     ap.add_argument("--json-out", default=None,
                     help="also write the merged report as JSON")
     ap.add_argument("--samples", action="store_true",
-                    help="merge mid-run talp_sample_rank*.json snapshots "
+                    help="merge mid-run talp_sample_rank* snapshots "
                          "instead of post-mortem rank files")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a job-level Chrome/Perfetto trace JSON "
+                         "built from the merged result (device lanes are "
+                         "exact when rank payloads attach raw timelines)")
     args = ap.parse_args(argv)
 
     # Diagnose before FileSpoolTransport, whose constructor would
@@ -754,6 +787,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     if args.json_out:
         with open(args.json_out, "w") as f:
             f.write(to_json(job))
+    if args.trace_out:
+        from .telemetry.traceexport import export_job
+
+        rank_tls = {} if args.samples else transport.collect_timelines()
+        with open(args.trace_out, "w") as f:
+            f.write(export_job(job, rank_tls))
+        print(f"wrote Chrome trace: {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ import numpy as np
 
 from . import intervals as iv
 from .recordio import KIND_KERNEL, KIND_MEMORY, ColumnStore, as_record_columns
+from .telemetry import overhead as _ovh
 
 
 class HostState(enum.Enum):
@@ -286,23 +287,24 @@ class DeviceTimeline:
         v = self._store.view()
         if len(v) == 0:
             return
-        starts, ends, kinds = v["start"], v["end"], v["kind"]
-        lo, hi = float(starts.min()), float(ends.max())
-        self._span = (
-            (lo, hi) if self._span is None
-            else (min(self._span[0], lo), max(self._span[1], hi))
-        )
-        for kind in DeviceActivity:
-            mask = kinds == kind.code
-            if not mask.any():
-                continue
-            pairs = np.stack([starts[mask], ends[mask]], axis=1)
-            if kind in self._compact:
-                pairs = np.concatenate([pairs, self._compact[kind]], axis=0)
-            self._compact[kind] = iv.flatten(pairs)
-        self._n_compacted += len(v)
-        self._store.clear()
-        self._kind_cache.clear()
+        with _ovh.section("compact"):
+            starts, ends, kinds = v["start"], v["end"], v["kind"]
+            lo, hi = float(starts.min()), float(ends.max())
+            self._span = (
+                (lo, hi) if self._span is None
+                else (min(self._span[0], lo), max(self._span[1], hi))
+            )
+            for kind in DeviceActivity:
+                mask = kinds == kind.code
+                if not mask.any():
+                    continue
+                pairs = np.stack([starts[mask], ends[mask]], axis=1)
+                if kind in self._compact:
+                    pairs = np.concatenate([pairs, self._compact[kind]], axis=0)
+                self._compact[kind] = iv.flatten(pairs)
+            self._n_compacted += len(v)
+            self._store.clear()
+            self._kind_cache.clear()
 
     def kind_intervals(self, kind: DeviceActivity) -> np.ndarray:
         """Flattened intervals of one activity kind (compacted + pending).

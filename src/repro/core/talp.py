@@ -32,6 +32,7 @@ from . import intervals as ivx
 from .device_metrics import DeviceMetrics, device_metrics
 from .host_metrics import HostMetrics, host_metrics
 from .states import DeviceActivity, DeviceTimeline, HostState
+from .telemetry import overhead as _ovh
 from .tree import MetricNode, device_tree, host_tree
 
 __all__ = ["TalpMonitor", "RegionResult", "TalpResult"]
@@ -122,11 +123,25 @@ class TalpMonitor:
         backend: Optional[object] = None,
         auto_start: bool = True,
         incremental: bool = True,
+        overhead_report: bool = False,
     ):
         self.name = name
         self.rank = rank
         self.clock = clock
         self.backend = backend
+        # Self-overhead accounting: every monitor owns an accumulator and
+        # installs it process-globally (last monitor wins — the
+        # one-monitor-per-rank reality), so the hot paths it does not own
+        # directly (DeviceTimeline.compact, backend flush, spool publish)
+        # charge the same ledger. The accumulator always uses a *real*
+        # monotonic clock, independent of ``clock`` (tests drive monitors
+        # with synthetic clocks; the monitor's own cost is still real).
+        # ``overhead_report=True`` additionally surfaces the measured
+        # wall-clock fraction as the optional ``talp_overhead`` node of
+        # the Global region's host hierarchy.
+        self.overhead = _ovh.OverheadAccumulator()
+        self.overhead_report = overhead_report
+        _ovh.install(self.overhead)
         # ``incremental`` keeps the per-device flattened-interval arrays
         # cached between sample() calls, folding in only records that
         # arrived since the previous sample (via DeviceTimeline.compact).
@@ -241,23 +256,31 @@ class TalpMonitor:
     ) -> int:
         """Batch entry point: deliver one whole activity buffer for a
         device as columns (see :meth:`DeviceTimeline.ingest_arrays`)."""
-        return self.device(dev).ingest_arrays(kinds, starts, ends, streams)
+        t0 = self.overhead.begin()
+        try:
+            return self.device(dev).ingest_arrays(kinds, starts, ends, streams)
+        finally:
+            self.overhead.end("ingest", t0)
 
     def _flush_backend(self) -> None:
         be = self.backend
         if be is None:
             return
-        if hasattr(be, "flush_arrays"):
-            # Columnar path: whole activity buffers, zero per-event objects.
-            for dev, kinds, starts, ends, streams in be.flush_arrays():
-                self.device(dev).ingest_arrays(kinds, starts, ends, streams)
-        elif hasattr(be, "flush"):
-            # Legacy object path: batch per device before ingesting.
-            by_dev: Dict[int, List] = {}
-            for dev, rec in be.flush():
-                by_dev.setdefault(dev, []).append(rec)
-            for dev, recs in by_dev.items():
-                self.device(dev).ingest(recs)
+        t0 = self.overhead.begin()
+        try:
+            if hasattr(be, "flush_arrays"):
+                # Columnar path: whole activity buffers, zero per-event objects.
+                for dev, kinds, starts, ends, streams in be.flush_arrays():
+                    self.device(dev).ingest_arrays(kinds, starts, ends, streams)
+            elif hasattr(be, "flush"):
+                # Legacy object path: batch per device before ingesting.
+                by_dev: Dict[int, List] = {}
+                for dev, rec in be.flush():
+                    by_dev.setdefault(dev, []).append(rec)
+                for dev, recs in by_dev.items():
+                    self.device(dev).ingest(recs)
+        finally:
+            self.overhead.end("ingest", t0)
 
     # ------------------------------------------------------------------
     # Transparent instrumentation
@@ -325,20 +348,24 @@ class TalpMonitor:
         flattened pair is rebuilt from those, and an unchanged timeline
         is a pure cache hit — no re-flattening of the whole history.
         """
-        flats: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-        for dev, tl in sorted(self.devices.items()):
-            if self.incremental:
-                cached = self._flat_cache.get(dev)
-                if cached is not None and cached[0] == tl.n_records:
-                    flats[dev] = cached[1]
-                    continue
-                tl.compact()  # fold pending records once, incrementally
-            kern = tl.kind_intervals(DeviceActivity.KERNEL)
-            mem = ivx.subtract(tl.kind_intervals(DeviceActivity.MEMORY), kern)
-            flats[dev] = (kern, mem)
-            if self.incremental:
-                self._flat_cache[dev] = (tl.n_records, flats[dev])
-        return flats
+        t0 = self.overhead.begin()
+        try:
+            flats: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+            for dev, tl in sorted(self.devices.items()):
+                if self.incremental:
+                    cached = self._flat_cache.get(dev)
+                    if cached is not None and cached[0] == tl.n_records:
+                        flats[dev] = cached[1]
+                        continue
+                    tl.compact()  # fold pending records once, incrementally
+                kern = tl.kind_intervals(DeviceActivity.KERNEL)
+                mem = ivx.subtract(tl.kind_intervals(DeviceActivity.MEMORY), kern)
+                flats[dev] = (kern, mem)
+                if self.incremental:
+                    self._flat_cache[dev] = (tl.n_records, flats[dev])
+            return flats
+        finally:
+            self.overhead.end("flatten", t0)
 
     def _region_result(
         self,
@@ -351,7 +378,16 @@ class TalpMonitor:
         windows = acc.window_intervals(now)
         useful = max(0.0, elapsed - acc.offload - acc.mpi)
         hm = (
-            host_metrics([useful], [acc.offload], [acc.mpi], elapsed=elapsed)
+            host_metrics(
+                [useful], [acc.offload], [acc.mpi], elapsed=elapsed,
+                # Self-cost is a wall-clock fraction, so it only makes
+                # sense against the whole-run window: annotate Global.
+                talp_overhead=(
+                    self.overhead.fraction(elapsed)
+                    if self.overhead_report and name == self.GLOBAL
+                    else None
+                ),
+            )
             if elapsed > 0
             else None
         )
@@ -383,13 +419,29 @@ class TalpMonitor:
             device_states=dev_states,
         )
 
+    def region_windows(
+        self, now: Optional[float] = None
+    ) -> Dict[str, np.ndarray]:
+        """Absolute (monitor-clock) flattened window arrays per region —
+        open regions extend to ``now``. The exact timestamps the trace
+        exporter turns into region begin/end markers."""
+        if now is None:
+            now = self.clock()
+        return {
+            name: acc.window_intervals(now) for name, acc in self._acc.items()
+        }
+
     def sample(self, region: Optional[str] = None) -> RegionResult:
         """Online metrics for an open (or closed) region — TALP's runtime mode."""
-        self._flush_backend()
-        return self._region_result(
-            region or self.GLOBAL, now=self.clock(),
-            device_flats=self._device_flats(),
-        )
+        t0 = self.overhead.begin()
+        try:
+            self._flush_backend()
+            return self._region_result(
+                region or self.GLOBAL, now=self.clock(),
+                device_flats=self._device_flats(),
+            )
+        finally:
+            self.overhead.end("sample", t0)
 
     def sample_result(self) -> TalpResult:
         """Non-destructive all-regions snapshot at the current clock — the
@@ -400,26 +452,34 @@ class TalpMonitor:
         the run (e.g. on a ``--talp-sample-every`` cadence) and merged
         across ranks into a job-level mid-run report.
         """
-        self._flush_backend()
-        now = self.clock()
-        flats = self._device_flats()
-        regions = {
-            name: self._region_result(name, now=now, device_flats=flats)
-            for name in self._acc
-        }
-        return TalpResult(name=self.name, regions=regions)
+        t0 = self.overhead.begin()
+        try:
+            self._flush_backend()
+            now = self.clock()
+            flats = self._device_flats()
+            regions = {
+                name: self._region_result(name, now=now, device_flats=flats)
+                for name in self._acc
+            }
+            return TalpResult(name=self.name, regions=regions)
+        finally:
+            self.overhead.end("sample", t0)
 
     def finalize(self) -> TalpResult:
         """Close remaining regions and produce the post-mortem result."""
         now = self.clock()
         while self._region_stack:
             self.close_region(self._region_stack[-1])
-        self._flush_backend()
-        if self.backend is not None and hasattr(self.backend, "stop"):
-            self.backend.stop()
-        flats = self._device_flats()
-        regions = {
-            name: self._region_result(name, now=None, device_flats=flats)
-            for name in self._acc
-        }
-        return TalpResult(name=self.name, regions=regions)
+        t0 = self.overhead.begin()
+        try:
+            self._flush_backend()
+            if self.backend is not None and hasattr(self.backend, "stop"):
+                self.backend.stop()
+            flats = self._device_flats()
+            regions = {
+                name: self._region_result(name, now=None, device_flats=flats)
+                for name in self._acc
+            }
+            return TalpResult(name=self.name, regions=regions)
+        finally:
+            self.overhead.end("sample", t0)

@@ -33,34 +33,47 @@ def _paint(row: np.ndarray, intervals, ch: str, t0: float, scale: float):
         row[a: min(b, len(row))] = ch
 
 
-def render_trace(trace: Trace, width: int = 72) -> str:
+def render_trace(trace: Trace, width: int = 72, legend: bool = True) -> str:
+    """Render one row per host rank and per device; ``legend=False``
+    drops the state-character key from the header (embedding in logs
+    that print it once)."""
     if trace.window is not None:
         t0, t1 = trace.window
     else:
         t1 = trace.elapsed
         t0 = 0.0
-    span = max(t1 - t0, 1e-12)
-    scale = width / span
-    lines: List[str] = [
-        f"trace '{trace.name}'  [{t0:.3f}s .. {t1:.3f}s]  "
-        f"(host: #=useful o=offload m=mpi | device: #=kernel ==memory .=idle)"
-    ]
+    span = t1 - t0
+    # A degenerate (zero-width) window renders empty rows rather than
+    # scaling finite durations by an effectively infinite factor.
+    scale = width / span if span > 1e-12 else 0.0
+    header = f"trace '{trace.name}'  [{t0:.3f}s .. {t1:.3f}s]"
+    if legend:
+        header += (
+            "  (host: #=useful o=offload m=mpi"
+            " | device: #=kernel ==memory .=idle)"
+        )
+    lines: List[str] = [header]
     # Host rows: reconstruct order-free proportional bars (durations only)
     for rank in sorted(trace.hosts):
         h = trace.hosts[rank]
         row = np.full(width, " ", dtype="<U1")
         cursor = 0
         for dur, ch in ((h.useful, "#"), (h.offload, "o"), (h.mpi, "m")):
-            n = int(round(dur * scale))
-            row[cursor: cursor + n] = ch
-            cursor += n
+            # Clamp to the remaining row: state totals can exceed the
+            # window (or the window can be zero-width) without the
+            # cursor running past the bar.
+            n = min(int(round(dur * scale)), width - cursor)
+            if n > 0:
+                row[cursor: cursor + n] = ch
+                cursor += n
         lines.append(f"rank {rank:3d} |{''.join(row)}|")
     # Device rows: exact interval painting
     for dev in sorted(trace.devices):
         tl = trace.devices[dev]
         states = tl.state_intervals((t0, t1))
         row = np.full(width, ".", dtype="<U1")
-        _paint(row, states[DeviceState.MEMORY], "=", t0, scale)
-        _paint(row, states[DeviceState.KERNEL], "#", t0, scale)
+        if scale > 0:
+            _paint(row, states[DeviceState.MEMORY], "=", t0, scale)
+            _paint(row, states[DeviceState.KERNEL], "#", t0, scale)
         lines.append(f"dev  {dev:3d} |{''.join(row)}|")
     return "\n".join(lines)

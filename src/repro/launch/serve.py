@@ -46,22 +46,44 @@ def serve(
     talp_spool: str = None,
     talp_sample_every: int = 0,
     talp_spool_format: str = "binary",
+    talp_trace_out: str = None,
+    talp_metrics_jsonl: str = None,
+    talp_prometheus_port: int = None,
 ):
     """Serve a batch of requests. Multi-rank serving fleets: pass
     ``rank``/``world_size`` and a shared ``talp_spool`` dir to get one
     job-level TALP report across all serving processes.
     ``talp_sample_every=N`` publishes a mid-run snapshot every N decoded
-    tokens (merged across ranks when a spool is given)."""
+    tokens (merged across ranks when a spool is given).
+
+    Observability mirrors :func:`repro.launch.train.train`:
+    ``talp_trace_out`` (Chrome/Perfetto trace at exit),
+    ``talp_metrics_jsonl`` (snapshot stream), ``talp_prometheus_port``
+    (opt-in ``/metrics`` endpoint — the natural fit for a long-lived
+    serving process)."""
     backend = RuntimeBackend()
-    mon = TalpMonitor("serve", rank=rank, backend=backend)
+    mon = TalpMonitor("serve", rank=rank, backend=backend,
+                      overhead_report=True)
     sample_transport = (
         FileSpoolTransport(talp_spool, world_size=world_size,
                            payload=talp_spool_format)
         if talp_spool and talp_sample_every else None
     )
+    telemetry = None
+    if talp_metrics_jsonl or talp_prometheus_port is not None or talp_trace_out:
+        from ..core.telemetry.exporter import TelemetryExporter
+
+        telemetry = TelemetryExporter(mon, jsonl=talp_metrics_jsonl)
+        if talp_prometheus_port is not None:
+            port = telemetry.serve(port=talp_prometheus_port)
+            if verbose:
+                print(f"[talp] prometheus exposition on :{port}/metrics")
 
     def sample_snapshot(tag: str) -> None:
-        snapshot = mon.sample_result()
+        snapshot = (
+            telemetry.sample().result if telemetry is not None
+            else mon.sample_result()
+        )
         if sample_transport is not None:
             sample_transport.submit_sample(snapshot, rank=rank)
             job_snap = sample_transport.merge_samples(name=mon.name)
@@ -120,7 +142,21 @@ def serve(
             if talp_sample_every and (t + 1) % talp_sample_every == 0:
                 sample_snapshot(f"token {t}")
 
+    if telemetry is not None:
+        telemetry.sample()  # last stream record covers the full window
     result = mon.finalize()
+    if talp_trace_out:
+        from ..core.telemetry.traceexport import export_monitor
+
+        with open(talp_trace_out, "w") as f:
+            f.write(export_monitor(
+                mon, result=result,
+                samples=telemetry.trace_samples() if telemetry else None,
+            ))
+        if verbose:
+            print(f"[talp] wrote Chrome trace: {talp_trace_out}")
+    if telemetry is not None:
+        telemetry.close()
     if verbose:
         print(render_tables(result))
     if talp_json:
@@ -149,6 +185,13 @@ def main():
                     default="binary",
                     help="spool payload: versioned binary .npz (default) "
                          "or legacy JSON")
+    ap.add_argument("--talp-trace-out", default=None,
+                    help="write a Chrome/Perfetto trace JSON at exit")
+    ap.add_argument("--talp-metrics-jsonl", default=None,
+                    help="stream every TALP snapshot as one JSON line")
+    ap.add_argument("--talp-prometheus-port", type=int, default=None,
+                    help="serve the latest snapshot as Prometheus text "
+                         "(0 = ephemeral port)")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     args = ap.parse_args()
@@ -158,7 +201,10 @@ def main():
                       talp_json=args.talp_json, rank=args.rank,
                       world_size=args.world_size, talp_spool=args.talp_spool,
                       talp_sample_every=args.talp_sample_every,
-                      talp_spool_format=args.talp_spool_format)
+                      talp_spool_format=args.talp_spool_format,
+                      talp_trace_out=args.talp_trace_out,
+                      talp_metrics_jsonl=args.talp_metrics_jsonl,
+                      talp_prometheus_port=args.talp_prometheus_port)
     dt = time.time() - t0
     n = tokens.size
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

@@ -61,6 +61,9 @@ def train(
     talp_spool: str = None,
     talp_sample_every: int = 0,
     talp_spool_format: str = "binary",
+    talp_trace_out: str = None,
+    talp_metrics_jsonl: str = None,
+    talp_prometheus_port: int = None,
 ):
     """Train a (usually reduced) config; returns (state, history, talp).
 
@@ -74,15 +77,31 @@ def train(
     with a ``talp_spool`` the snapshot is published to the spool and
     merged across whichever ranks have reported so far — a *job-level*
     mid-run TALP report, TALP's online mode at job scope.
+
+    Observability: ``talp_trace_out`` writes a Chrome/Perfetto trace of
+    this rank at exit; ``talp_metrics_jsonl`` streams every snapshot as
+    one JSON line; ``talp_prometheus_port`` serves the latest snapshot
+    as Prometheus text on ``/metrics`` (0 = ephemeral port). The report
+    carries the measured ``talp_overhead`` annotation.
     """
     opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10, total_steps=steps)
     backend = RuntimeBackend()
-    mon = TalpMonitor("train", rank=rank, backend=backend)
+    mon = TalpMonitor("train", rank=rank, backend=backend,
+                      overhead_report=True)
     sample_transport = (
         FileSpoolTransport(talp_spool, world_size=world_size,
                            payload=talp_spool_format)
         if talp_spool and talp_sample_every else None
     )
+    telemetry = None
+    if talp_metrics_jsonl or talp_prometheus_port is not None or talp_trace_out:
+        from ..core.telemetry.exporter import TelemetryExporter
+
+        telemetry = TelemetryExporter(mon, jsonl=talp_metrics_jsonl)
+        if talp_prometheus_port is not None:
+            port = telemetry.serve(port=talp_prometheus_port)
+            if verbose:
+                print(f"[talp] prometheus exposition on :{port}/metrics")
 
     data = SyntheticTokenPipeline(
         DataConfig(
@@ -140,7 +159,13 @@ def train(
                       f"PE_host={snap.host.parallel_efficiency:.3f} "
                       f"OE={snap.host.device_offload_efficiency:.3f}")
             if talp_sample_every and (step + 1) % talp_sample_every == 0:
-                snapshot = mon.sample_result()
+                # Through the telemetry exporter when one is attached,
+                # so the snapshot also lands in the ring buffer and the
+                # JSONL/Prometheus stream.
+                snapshot = (
+                    telemetry.sample().result if telemetry is not None
+                    else mon.sample_result()
+                )
                 if sample_transport is not None:
                     sample_transport.submit_sample(snapshot, rank=rank)
                     job_snap = sample_transport.merge_samples(name=mon.name)
@@ -161,7 +186,23 @@ def train(
         manager.save(steps - 1, state)
         manager.wait()
     data.stop()
+    if telemetry is not None:
+        # Final snapshot while the monitor still runs: the stream's last
+        # record and the post-mortem report describe the same window.
+        telemetry.sample()
     result = mon.finalize()
+    if talp_trace_out:
+        from ..core.telemetry.traceexport import export_monitor
+
+        with open(talp_trace_out, "w") as f:
+            f.write(export_monitor(
+                mon, result=result,
+                samples=telemetry.trace_samples() if telemetry else None,
+            ))
+        if verbose:
+            print(f"[talp] wrote Chrome trace: {talp_trace_out}")
+    if telemetry is not None:
+        telemetry.close()
     if verbose:
         print(render_tables(result))
         if detector.events:
@@ -196,6 +237,15 @@ def main():
                     default="binary",
                     help="spool payload: versioned binary .npz (default) "
                          "or legacy JSON")
+    ap.add_argument("--talp-trace-out", default=None,
+                    help="write a Chrome/Perfetto trace JSON of this rank "
+                         "at exit")
+    ap.add_argument("--talp-metrics-jsonl", default=None,
+                    help="stream every TALP snapshot as one JSON line to "
+                         "this file")
+    ap.add_argument("--talp-prometheus-port", type=int, default=None,
+                    help="serve the latest snapshot as Prometheus text on "
+                         "this port (0 = ephemeral)")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     ap.add_argument("--history-json", default=None)
@@ -216,6 +266,9 @@ def main():
         talp_spool=args.talp_spool,
         talp_sample_every=args.talp_sample_every,
         talp_spool_format=args.talp_spool_format,
+        talp_trace_out=args.talp_trace_out,
+        talp_metrics_jsonl=args.talp_metrics_jsonl,
+        talp_prometheus_port=args.talp_prometheus_port,
     )
     if args.history_json:
         with open(args.history_json, "w") as f:

@@ -79,3 +79,26 @@ def test_render_trace_idle_classification():
     art = render_trace(b.build(), width=40)
     dev = next(l for l in art.splitlines() if l.startswith("dev"))
     assert "." in dev and "#" in dev
+
+
+def test_render_trace_zero_width_window():
+    """A degenerate (t0 == t1) window must render instead of dividing by
+    ~zero and painting unbounded rows."""
+    b = SyntheticTraceBuilder(nranks=1, ndevices=1)
+    b.rank(0).useful(1.0).offload_kernel(1.0)
+    tr = b.build()
+    tr.window = (2.0, 2.0)
+    art = render_trace(tr, width=40)
+    lines = art.splitlines()
+    assert len(lines) == 3
+    # nothing painted: host bar blank, device bar all idle
+    assert set(lines[1].split("|")[1]) <= {" "}
+    assert set(lines[2].split("|")[1]) <= {"."}
+
+
+def test_render_trace_legend_flag():
+    b = SyntheticTraceBuilder(nranks=1, ndevices=1)
+    b.rank(0).useful(1.0)
+    tr = b.build()
+    assert "#=useful" in render_trace(tr).splitlines()[0]
+    assert "#=useful" not in render_trace(tr, legend=False).splitlines()[0]
