@@ -16,14 +16,20 @@ trajectory. Exits nonzero if any perf gate misses its target:
     per-record payload;
   * vectorized Chrome trace export ≥ ``--export-target-speedup``× the
     retained per-event reference exporter (identical parsed events,
-    output passes the structural validator).
+    output passes the structural validator);
+  * per-step capture (StepSeriesRecorder + watchdog at region close)
+    ≥ ``--step-target-speedup``× the full re-flatten baseline AND within
+    ``--step-target-fraction`` of a nominal 10ms training step, with the
+    cost accounted under the report's ``talp_overhead`` annotation.
 
 Usage:
   PYTHONPATH=src python benchmarks/merge_bench.py [--ranks 64] \
       [--sample-records 100000] [--sample-target-speedup 5] \
       [--ingest-records 100000] [--ingest-target-speedup 10] \
       [--spool-target-speedup 5] [--export-records 100000] \
-      [--export-target-speedup 5] [--json out.json]
+      [--export-target-speedup 5] [--step-records 100000] \
+      [--step-target-speedup 2.5] [--step-target-fraction 0.05] \
+      [--json out.json]
 """
 
 from __future__ import annotations
@@ -297,6 +303,87 @@ def bench_spool_payload(n_records: int, target_speedup: float) -> bool:
     return speedup >= target_speedup
 
 
+def _step_series_run(n_records: int, n_steps: int, incremental: bool):
+    """Drive n_steps ``step`` regions with ~n_records total device
+    records through a StepSeriesRecorder + watchdog — the per-step
+    attribution hot path. Returns (monitor, recorder, wall seconds)."""
+    from repro.core.telemetry.stepseries import StepSeriesRecorder
+    from repro.core.telemetry.watchdog import EfficiencyWatchdog
+
+    per = max(1, n_records // n_steps)
+    clk = _Clock()
+    mon = TalpMonitor("steps", clock=clk, incremental=incremental,
+                      overhead_report=True)
+    rec = StepSeriesRecorder(mon, capacity=n_steps,
+                             watchdog=EfficiencyWatchdog())
+    kinds = np.zeros(per, dtype=np.uint8)
+    streams = np.zeros(per, dtype=np.uint32)
+    offsets = np.arange(per, dtype=np.float64) * 1e-5
+    t_wall0 = time.perf_counter()
+    for _ in range(n_steps):
+        with mon.region("step"):
+            starts = clk.t + offsets
+            mon.ingest_device_arrays(0, kinds, starts, starts + 8e-6, streams)
+            with mon.offload():
+                clk.advance(per * 1e-5)
+            clk.advance(1e-5)
+    wall = time.perf_counter() - t_wall0
+    rec.close()
+    return mon, rec, wall
+
+
+def bench_step_series(n_records: int, target_speedup: float,
+                      target_fraction: float,
+                      nominal_step_ms: float = 10.0) -> bool:
+    """Per-step capture cost at an n_records device-record history:
+    incremental flattened-timeline cache (fold only the step's new
+    records at each region close) vs the full re-flatten baseline.
+
+    Two gates: the incremental path must beat the baseline by
+    ``target_speedup``×, and its per-step capture cost must stay within
+    ``target_fraction`` of a ``nominal_step_ms`` training step — the
+    bounded-overhead claim for leaving the watchdog on in production.
+    The cost is also required to be visible in the report's
+    ``talp_overhead`` annotation (``step`` section)."""
+    n_steps = 200
+    mon_base, _, wall_base = _step_series_run(n_records, n_steps,
+                                              incremental=False)
+    mon_inc, rec, wall_inc = _step_series_run(n_records, n_steps,
+                                              incremental=True)
+
+    us_base = mon_base.overhead.totals["step"] / n_steps * 1e6
+    us_inc = mon_inc.overhead.totals["step"] / n_steps * 1e6
+    speedup = us_base / us_inc if us_inc > 0 else float("inf")
+    fraction = (us_inc / 1e6) / (nominal_step_ms / 1e3)
+    _row(f"step_series_full_reflatten_{n_records}", us_base,
+         "per-step capture, baseline")
+    _row(f"step_series_incremental_{n_records}", us_inc,
+         f"{speedup:.1f}x vs baseline (target {target_speedup:.1f}x)")
+    _row(f"step_series_overhead_{n_records}", us_inc,
+         f"{fraction * 100:.2f}% of a {nominal_step_ms:.0f}ms step "
+         f"(target {target_fraction * 100:.1f}%)")
+
+    # every step captured, device metrics present in the rows
+    assert len(rec.series) == n_steps and rec.series.n_dropped == 0
+    lb = rec.series.column("device_load_balance")
+    assert np.isfinite(lb).all()
+    # the cost is accounted in the report's talp_overhead annotation
+    res = mon_inc.finalize()
+    ov = res.regions[TalpMonitor.GLOBAL].host.talp_overhead
+    assert ov is not None and mon_inc.overhead.counts["step"] == n_steps
+    del wall_base, wall_inc
+
+    ok = True
+    if speedup < target_speedup:
+        print("FAIL: per-step capture speedup below target", file=sys.stderr)
+        ok = False
+    if fraction > target_fraction:
+        print("FAIL: per-step capture overhead fraction above target",
+              file=sys.stderr)
+        ok = False
+    return ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ranks", type=int, default=64)
@@ -312,6 +399,11 @@ def main() -> int:
     ap.add_argument("--spool-target-speedup", type=float, default=5.0)
     ap.add_argument("--export-records", type=int, default=100_000)
     ap.add_argument("--export-target-speedup", type=float, default=5.0)
+    ap.add_argument("--step-records", type=int, default=100_000)
+    ap.add_argument("--step-target-speedup", type=float, default=2.5)
+    ap.add_argument("--step-target-fraction", type=float, default=0.05,
+                    help="per-step capture budget as a fraction of a "
+                         "nominal 10ms training step")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write the rows as a BENCH_talp.json trajectory")
     args = ap.parse_args()
@@ -371,6 +463,10 @@ def main() -> int:
     if not bench_trace_export(args.export_records,
                               args.export_target_speedup):
         print("FAIL: trace export speedup below target", file=sys.stderr)
+        rc = 1
+    if not bench_step_series(args.step_records,
+                             args.step_target_speedup,
+                             args.step_target_fraction):
         rc = 1
     if args.json:
         with open(args.json, "w") as f:

@@ -64,6 +64,7 @@ __all__ = [
     "merge_region_results",
     "merge_results",
     "merge_samples",
+    "merge_step_series",
     "region_result_from_dict",
     "talp_result_from_json",
     "result_to_spool_bytes",
@@ -98,11 +99,14 @@ def _recompute_host(
 
 
 def _recompute_device(
-    device_states: Dict[int, Dict[str, float]], elapsed: float
+    device_states: Dict[int, Dict[str, float]], elapsed: float,
+    extras: Optional[Dict[str, float]] = None,
 ) -> Optional[DeviceMetrics]:
     if not device_states or elapsed <= 0:
         return None
-    sd = StateDurations.from_states(device_states=device_states, elapsed=elapsed)
+    sd = StateDurations.from_states(
+        device_states=device_states, elapsed=elapsed, extras=extras
+    )
     return DeviceMetrics.from_frame(DEVICE.compute(sd))
 
 
@@ -151,13 +155,29 @@ def merge_region_results(
     ]
     extras = {"talp_overhead": max(overheads)} if overheads else None
 
+    # Measured Computational Efficiency (FLOPs over peak·busy) composes
+    # as the kernel-busy-weighted mean across ranks: Σ flops_i / (peak ·
+    # Σ busy_i) with flops_i = CE_i · peak · busy_i. Busy per rank is the
+    # sum of its device kernel durations, which the reduced states carry.
+    ce_num = ce_den = 0.0
+    for p in parts:
+        ce = getattr(p.device, "computational_efficiency", None)
+        if ce is None:
+            continue
+        busy = sum(st["kernel"] for st in p.device_states.values())
+        ce_num += ce * busy
+        ce_den += busy
+    dev_extras = (
+        {"computational_efficiency": ce_num / ce_den} if ce_den > 0 else None
+    )
+
     return RegionResult(
         name=name,
         elapsed=elapsed,
         n_ranks=len(host_states),
         n_devices=len(device_states),
         host=_recompute_host(host_states, elapsed, extras=extras),
-        device=_recompute_device(device_states, elapsed),
+        device=_recompute_device(device_states, elapsed, extras=dev_extras),
         host_states=host_states,
         device_states=device_states,
     )
@@ -199,6 +219,108 @@ def merge_samples(
     return merge_results(results, name=name)
 
 
+def merge_step_series(series_by_rank: Dict[int, "object"], name: str = "job"):
+    """Rank-align per-rank step series into one job-level per-step table.
+
+    Rows are aligned by ``(region name, step index)`` — step *k* of
+    region *r* on every rank is the same logical step of the program, so
+    the job-level row for it is computed across exactly those ranks.
+
+    Host metrics are **recomputed** through the hierarchy engine (the
+    merge-layer invariant: never average per-rank efficiencies): each
+    step row carries its per-window ``useful``/``offload``/``mpi``
+    durations, which stacked across ranks are precisely the
+    :class:`~repro.core.hierarchy.StateDurations` HOST needs — so
+    job-level per-step ``load_balance`` etc. are exact, including any
+    ``with_child()`` host metric whose formula reads those inputs.
+    Device-hierarchy columns (and any column the engine cannot rebuild
+    from the carried inputs) are summarized as the across-rank mean —
+    the per-device vectors behind them are not carried per step.
+
+    Returns a :class:`~repro.core.telemetry.stepseries.StepSeries`
+    holding the merged table; its base ``useful``/``offload``/``mpi``
+    are across-rank sums and a trailing ``n_ranks`` column records
+    coverage per row.
+    """
+    from .telemetry.stepseries import BASE_FIELDS, StepSeries
+
+    if not series_by_rank:
+        raise ValueError("merge_step_series: empty input")
+    rank_rows: Dict[int, Dict[Tuple[str, int], np.void]] = {}
+    metric_cols: List[str] = []
+    for rank in sorted(series_by_rank):
+        s = series_by_rank[rank]
+        rows = s.rows()
+        for c in s.metric_columns:
+            if c not in metric_cols:
+                metric_cols.append(c)
+        by_key = rank_rows.setdefault(rank, {})
+        for row in rows:
+            by_key[(s.region_name(row["region"]), int(row["step"]))] = row
+    keys = sorted(
+        {k for by_key in rank_rows.values() for k in by_key},
+        key=lambda k: (min(
+            float(by_key[k]["t_open"])
+            for by_key in rank_rows.values() if k in by_key
+        ), k[0], k[1]),
+    )
+    out = StepSeries.from_arrays(
+        rows=np.zeros(
+            len(keys),
+            dtype=np.dtype(
+                list(BASE_FIELDS)
+                + [(c, "f8") for c in metric_cols]
+                + [("n_ranks", "f8")]
+            ),
+        ),
+        regions=np.asarray([], dtype=np.str_),
+        n_total=len(keys),
+    )
+    for i, (region, step) in enumerate(keys):
+        parts = [
+            by_key[(region, step)]
+            for by_key in rank_rows.values()
+            if (region, step) in by_key
+        ]
+        row = out._buf[i]
+        rid = out._region_ids.get(region)
+        if rid is None:
+            rid = len(out._region_names)
+            out._region_ids[region] = rid
+            out._region_names.append(region)
+        row["region"] = rid
+        row["step"] = step
+        row["t_open"] = min(float(p["t_open"]) for p in parts)
+        row["t_close"] = max(float(p["t_close"]) for p in parts)
+        elapsed = max(float(p["elapsed"]) for p in parts)
+        row["elapsed"] = elapsed
+        for f in ("useful", "offload", "mpi"):
+            row[f] = sum(float(p[f]) for p in parts)
+        row["n_ranks"] = len(parts)
+        hvals: Dict[str, float] = {}
+        if elapsed > 0:
+            sd = StateDurations(
+                elapsed=elapsed,
+                useful=[float(p["useful"]) for p in parts],
+                offload=[float(p["offload"]) for p in parts],
+                mpi=[float(p["mpi"]) for p in parts],
+            )
+            hvals = HOST.compute(sd).values
+        for c in metric_cols:
+            hname, _, key = c.partition("_")
+            if hname == "host" and key in hvals:
+                row[c] = hvals[key]
+                continue
+            vals = [
+                float(p[c]) for p in parts
+                if c in (p.dtype.names or ()) and not np.isnan(p[c])
+            ]
+            row[c] = float(np.mean(vals)) if vals else np.nan
+    # the table's identity, for CLI display
+    out.name = name  # type: ignore[attr-defined]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # JSON reconstruction (the inverse of report.to_json, metrics recomputed)
 # ---------------------------------------------------------------------------
@@ -219,18 +341,21 @@ def region_result_from_dict(d: Dict, name: Optional[str] = None) -> RegionResult
         int(dev): {k: float(v) for k, v in st.items()}
         for dev, st in (d.get("device_states") or {}).items()
     }
-    # talp_overhead is a measurement (the producer's self-cost), not a
-    # derivable metric — it is the one host value trusted from the
-    # payload rather than recomputed.
+    # talp_overhead and computational_efficiency are measurements (the
+    # producer's self-cost / FLOP-model feed), not derivable from the
+    # reduced states — they are the values trusted from the payload
+    # rather than recomputed.
     ov = (d.get("host_metrics") or {}).get("talp_overhead")
     extras = {"talp_overhead": float(ov)} if ov is not None else None
+    ce = (d.get("device_metrics") or {}).get("computational_efficiency")
+    dev_extras = {"computational_efficiency": float(ce)} if ce is not None else None
     return RegionResult(
         name=name,
         elapsed=elapsed,
         n_ranks=len(host_states),
         n_devices=len(device_states),
         host=_recompute_host(host_states, elapsed, extras=extras),
-        device=_recompute_device(device_states, elapsed),
+        device=_recompute_device(device_states, elapsed, extras=dev_extras),
         host_states=host_states,
         device_states=device_states,
     )
@@ -325,6 +450,7 @@ def result_from_spool_bytes(
                 compact_threshold=meta.get("compact_threshold", 65536),
                 n_compacted=meta.get("n_compacted", 0),
                 span=meta.get("span"),
+                n_kernel=meta.get("n_kernel"),
             )
     return result, timelines
 
@@ -367,6 +493,7 @@ def _timeline_from_json_obj(d: Dict) -> DeviceTimeline:
         compact_threshold=d.get("compact_threshold", 65536),
         n_compacted=d.get("n_compacted", 0),
         span=d.get("span"),
+        n_kernel=d.get("n_kernel"),
     )
 
 
@@ -468,6 +595,8 @@ class FileSpoolTransport:
 
     PREFIX = "talp_rank"
     SAMPLE_PREFIX = "talp_sample_rank"
+    #: step-series spools are always NPZ (structured-array payload)
+    STEP_PREFIX = "talp_steps_rank"
     #: recognised payload extensions, in collection preference order
     EXTS = (".npz", ".json")
 
@@ -628,6 +757,52 @@ class FileSpoolTransport:
             raise ValueError(f"no sample snapshots in {self.spool_dir}")
         return merge_samples(results, name=name)
 
+    # -- step-resolution series -----------------------------------------
+    def _step_path(self, rank: int) -> str:
+        return os.path.join(
+            self.spool_dir, f"{self.STEP_PREFIX}{rank:05d}.npz"
+        )
+
+    def submit_steps(self, series, rank: int) -> str:
+        """Publish this rank's step series (atomic tmp + replace, like
+        every spool write). Always NPZ — the structured row array *is*
+        the schema, so readers need no hierarchy objects."""
+        with _ovh.section("spool"):
+            path = self._step_path(rank)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                np.savez(f, **series.to_arrays())
+            os.replace(tmp, path)
+            return path
+
+    def step_ranks(self) -> List[int]:
+        return self._scan_ranks(self.STEP_PREFIX)
+
+    def collect_steps(self) -> Dict[int, "object"]:
+        """Read back every rank's spooled step series."""
+        from .telemetry.stepseries import StepSeries
+
+        out: Dict[int, StepSeries] = {}
+        for rank in self.step_ranks():
+            path = self._step_path(rank)
+            if not os.path.exists(path):
+                continue
+            with np.load(path, allow_pickle=False) as npz:
+                out[rank] = StepSeries.from_arrays(
+                    rows=npz["rows"],
+                    regions=npz["regions"],
+                    n_total=int(npz["n_total"]),
+                )
+        return out
+
+    def merge_steps(self, name: str = "job"):
+        """Job-level per-step table across all spooled step series
+        (see :func:`merge_step_series`)."""
+        series = self.collect_steps()
+        if not series:
+            raise ValueError(f"no step-series spools in {self.spool_dir}")
+        return merge_step_series(series, name=name)
+
 
 class AllGatherTransport:
     """``jax.distributed``-style collective exchange of result payloads.
@@ -757,6 +932,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="write a job-level Chrome/Perfetto trace JSON "
                          "built from the merged result (device lanes are "
                          "exact when rank payloads attach raw timelines)")
+    ap.add_argument("--step-series", action="store_true",
+                    help="also merge talp_steps_rank*.npz step-series "
+                         "spools into a job-level per-step table "
+                         "(rank-aligned by step index; host metrics "
+                         "recomputed across ranks) and print it")
     args = ap.parse_args(argv)
 
     # Diagnose before FileSpoolTransport, whose constructor would
@@ -794,6 +974,18 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         with open(args.trace_out, "w") as f:
             f.write(export_job(job, rank_tls))
         print(f"wrote Chrome trace: {args.trace_out}")
+    if args.step_series:
+        try:
+            table = transport.merge_steps(name=args.name or job.name)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            sys.exit(2)
+        n_ranks = len(transport.step_ranks())
+        print(
+            f"\nJob-level step series ({n_ranks} rank(s), "
+            f"{len(table)} aligned steps):"
+        )
+        print(table.as_table())
 
 
 if __name__ == "__main__":

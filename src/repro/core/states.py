@@ -163,10 +163,22 @@ class DeviceTimeline:
     )
     _span: Optional[Tuple[float, float]] = field(default=None, init=False, repr=False)
     _n_compacted: int = field(default=0, init=False, repr=False)
+    # Kernel-record launch count, maintained at ingest time (compaction
+    # folds records into flattened occupancy, losing per-record identity,
+    # so the count cannot be recovered later). Feeds the monitor's
+    # measured Computational Efficiency (launches × model FLOPs).
+    _n_kernel: int = field(default=0, init=False, repr=False)
     # kind -> (pending-count watermark, flattened intervals); pending count
     # only moves monotonically between compactions (which clear the cache),
     # so it is a sound cache key.
     _kind_cache: Dict[DeviceActivity, Tuple[int, np.ndarray]] = field(
+        default_factory=dict, init=False, repr=False
+    )
+    # kind -> capacity slab backing the streaming-append fast path of
+    # compact(); the logical array in ``_compact`` is a prefix view of
+    # it. Writes only ever touch rows past every outstanding view's
+    # length, so shared views stay valid.
+    _compact_buf: Dict[DeviceActivity, np.ndarray] = field(
         default_factory=dict, init=False, repr=False
     )
 
@@ -186,6 +198,12 @@ class DeviceTimeline:
     def n_pending(self) -> int:
         """Pending (not yet compacted) records currently buffered."""
         return len(self._store)
+
+    @property
+    def n_kernel_records(self) -> int:
+        """Kernel records ever ingested (a launch count — counted at
+        ingest time, since compaction erases per-record identity)."""
+        return self._n_kernel
 
     @property
     def records(self) -> List[DeviceRecord]:
@@ -208,6 +226,8 @@ class DeviceTimeline:
                 f"record end < start: ({kind}, {start}, {end})"
             )
         self._store.append(kind.code, start, end, stream)
+        if kind is DeviceActivity.KERNEL:
+            self._n_kernel += 1
         if len(self._store) >= self.compact_threshold:
             self.compact()
 
@@ -232,10 +252,10 @@ class DeviceTimeline:
                 stream = rec[3] if len(rec) > 3 else 0
             if end < start:
                 raise ValueError(f"record end < start: ({kind}, {start}, {end})")
-            store.append(
-                kind.code if isinstance(kind, DeviceActivity) else int(kind),
-                start, end, stream,
-            )
+            code = kind.code if isinstance(kind, DeviceActivity) else int(kind)
+            store.append(code, start, end, stream)
+            if code == KIND_KERNEL:
+                self._n_kernel += 1
             n += 1
             if len(store) >= chunk:
                 self.compact()
@@ -260,6 +280,7 @@ class DeviceTimeline:
         kind_col, starts, ends, stream_col = as_record_columns(
             kinds, starts, ends, streams
         )
+        self._n_kernel += int(np.count_nonzero(kind_col == KIND_KERNEL))
         m = len(starts)
         pos = 0
         while pos < m:
@@ -298,10 +319,32 @@ class DeviceTimeline:
                 mask = kinds == kind.code
                 if not mask.any():
                     continue
-                pairs = np.stack([starts[mask], ends[mask]], axis=1)
-                if kind in self._compact:
-                    pairs = np.concatenate([pairs, self._compact[kind]], axis=0)
-                self._compact[kind] = iv.flatten(pairs)
+                pairs = iv.flatten(np.stack([starts[mask], ends[mask]], axis=1))
+                base = self._compact.get(kind)
+                if base is None or len(base) == 0:
+                    self._compact[kind] = pairs
+                    self._compact_buf.pop(kind, None)
+                elif len(pairs) and pairs[0, 0] > base[-1, 1]:
+                    # Streaming fast path: the new chunk lies strictly
+                    # after the compacted history (records arrive in time
+                    # order), so the fold appends into a capacity-doubling
+                    # slab — amortized O(chunk) per compact, not
+                    # O(history). Appends land past the end of every
+                    # outstanding prefix view, so sharing stays safe.
+                    n, k = len(base), len(pairs)
+                    buf = self._compact_buf.get(kind)
+                    if buf is None or base.base is not buf or n + k > len(buf):
+                        buf = np.empty((max(2 * (n + k), 1024), 2),
+                                       dtype=np.float64)
+                        buf[:n] = base
+                        self._compact_buf[kind] = buf
+                    buf[n:n + k] = pairs
+                    self._compact[kind] = buf[: n + k]
+                else:
+                    self._compact[kind] = iv.flatten(
+                        np.concatenate([base, pairs], axis=0)
+                    )
+                    self._compact_buf.pop(kind, None)
             self._n_compacted += len(v)
             self._store.clear()
             self._kind_cache.clear()
@@ -321,7 +364,11 @@ class DeviceTimeline:
         mask = v["kind"] == kind.code
         base = self._compact.get(kind)
         if not mask.any():
-            out = base.copy() if base is not None else iv.EMPTY.copy()
+            # No pending rows of this kind: hand out the compacted array
+            # itself (read-only contract above). Compaction never mutates
+            # it in place — folds reassign a fresh array — so sharing is
+            # safe and the post-compact path stays O(1) per call.
+            out = base if base is not None else iv.EMPTY.copy()
         else:
             pairs = np.stack([v["start"][mask], v["end"][mask]], axis=1)
             if base is not None:
@@ -354,6 +401,7 @@ class DeviceTimeline:
                 "device": self.device,
                 "compact_threshold": self.compact_threshold,
                 "n_compacted": self._n_compacted,
+                "n_kernel": self._n_kernel,
                 "span": list(self._span) if self._span is not None else None,
             },
         }
@@ -368,8 +416,13 @@ class DeviceTimeline:
         compact_threshold: int = 65536,
         n_compacted: int = 0,
         span: Optional[Tuple[float, float]] = None,
+        n_kernel: Optional[int] = None,
     ) -> "DeviceTimeline":
-        """Inverse of :meth:`to_columns` (exact state reconstruction)."""
+        """Inverse of :meth:`to_columns` (exact state reconstruction).
+
+        ``n_kernel`` restores the launch count; payloads from producers
+        that did not record it fall back to counting the pending rows
+        (the compacted portion's launches are unrecoverable)."""
         tl = cls(device=device, compact_threshold=compact_threshold)
         if len(kernel):
             tl._compact[DeviceActivity.KERNEL] = iv.as_intervals(kernel)
@@ -382,6 +435,11 @@ class DeviceTimeline:
                 pending["kind"], pending["start"],
                 pending["end"], pending["stream"],
             )
+        tl._n_kernel = (
+            int(n_kernel) if n_kernel is not None
+            else int(np.count_nonzero(pending["kind"] == KIND_KERNEL))
+            if len(pending) else 0
+        )
         return tl
 
     def occupancy(self, window: Optional[Tuple[float, float]] = None) -> DeviceOccupancy:

@@ -35,7 +35,31 @@ from .states import DeviceActivity, DeviceTimeline, HostState
 from .telemetry import overhead as _ovh
 from .tree import MetricNode, device_tree, host_tree
 
-__all__ = ["TalpMonitor", "RegionResult", "TalpResult"]
+__all__ = ["TalpMonitor", "RegionResult", "TalpResult", "StepCloseEvent"]
+
+
+@dataclass(frozen=True)
+class StepCloseEvent:
+    """One region close, seen by ``on_region_close`` callbacks.
+
+    ``index`` counts closes of *this* region (0-based) — the step index
+    of the step-series row. The state durations are **per-window
+    deltas**: exactly the offload/MPI charged between this open and this
+    close (not the region's cumulative totals), so a one-step anomaly is
+    visible at full amplitude instead of being averaged into history.
+    """
+
+    region: str
+    index: int
+    t_open: float
+    t_close: float
+    useful: float
+    offload: float
+    mpi: float
+
+    @property
+    def elapsed(self) -> float:
+        return self.t_close - self.t_open
 
 
 @dataclass
@@ -47,6 +71,9 @@ class _RegionAcc:
     of O(#windows). ``window_intervals`` likewise keeps a flattened-array
     cache of the closed windows and folds in only the ones appended since
     the last call — an open region samples in O(1) per new window.
+    ``open_offload``/``open_mpi`` snapshot the cumulative state totals at
+    ``open_region`` time so ``close_region`` can hand per-window deltas
+    to the region-close callbacks.
     """
 
     windows: List[Tuple[float, float]] = field(default_factory=list)
@@ -54,6 +81,8 @@ class _RegionAcc:
     offload: float = 0.0
     mpi: float = 0.0
     closed_total: float = 0.0
+    open_offload: float = 0.0
+    open_mpi: float = 0.0
     _flat: Optional[np.ndarray] = field(
         default=None, init=False, repr=False, compare=False
     )
@@ -124,11 +153,20 @@ class TalpMonitor:
         auto_start: bool = True,
         incremental: bool = True,
         overhead_report: bool = False,
+        flop_model: Optional[object] = None,
     ):
         self.name = name
         self.rank = rank
         self.clock = clock
         self.backend = backend
+        # Optional occupancy/FLOP source for the device hierarchy's
+        # Computational Efficiency annotation: any object exposing
+        # ``model_flops`` (useful FLOPs per device per kernel launch) and
+        # ``hw.peak_flops`` — an analytical ``StepModel`` or a compiled
+        # ``repro.roofline.RooflineReport`` both qualify, so the runtime
+        # and synthetic backends get a real CE feed, not just the
+        # analytical backend's synthesized traces.
+        self.flop_model = flop_model
         # Self-overhead accounting: every monitor owns an accumulator and
         # installs it process-globally (last monitor wins — the
         # one-monitor-per-rank reality), so the hot paths it does not own
@@ -152,6 +190,7 @@ class TalpMonitor:
         # one rank; merged results may carry many).
         self._acc: Dict[str, _RegionAcc] = {}
         self._region_stack: List[str] = []
+        self._close_callbacks: List[Callable[["TalpMonitor", StepCloseEvent], None]] = []
         self._state: Optional[HostState] = None
         self._state_since: Optional[float] = None
         self.devices: Dict[int, DeviceTimeline] = {}
@@ -178,7 +217,27 @@ class TalpMonitor:
         if acc.open_since is not None:
             raise RuntimeError(f"region {name!r} already open")
         acc.open_since = self.clock()
+        acc.open_offload = acc.offload
+        acc.open_mpi = acc.mpi
         self._region_stack.append(name)
+
+    def on_region_close(
+        self, callback: Callable[["TalpMonitor", StepCloseEvent], None]
+    ) -> Callable[[], None]:
+        """Register a callback fired at every ``close_region`` with a
+        :class:`StepCloseEvent` (per-window state deltas) — the per-step
+        sampling hook (``StepSeriesRecorder`` attaches here). Returns an
+        unregister function. Callbacks run after the window is recorded,
+        outside any host-state scope, and must not open/close regions."""
+        self._close_callbacks.append(callback)
+
+        def unregister() -> None:
+            try:
+                self._close_callbacks.remove(callback)
+            except ValueError:
+                pass
+
+        return unregister
 
     def close_region(self, name: str) -> None:
         if self._state is not None:
@@ -191,10 +250,25 @@ class TalpMonitor:
             )
         acc = self._acc[name]
         now = self.clock()
-        acc.windows.append((acc.open_since, now))
-        acc.closed_total += now - acc.open_since
+        t_open = acc.open_since
+        acc.windows.append((t_open, now))
+        acc.closed_total += now - t_open
         acc.open_since = None
         self._region_stack.pop()
+        if self._close_callbacks:
+            d_off = acc.offload - acc.open_offload
+            d_mpi = acc.mpi - acc.open_mpi
+            ev = StepCloseEvent(
+                region=name,
+                index=len(acc.windows) - 1,
+                t_open=t_open,
+                t_close=now,
+                useful=max(0.0, (now - t_open) - d_off - d_mpi),
+                offload=d_off,
+                mpi=d_mpi,
+            )
+            for cb in tuple(self._close_callbacks):
+                cb(self, ev)
 
     @contextmanager
     def region(self, name: str):
@@ -367,6 +441,38 @@ class TalpMonitor:
         finally:
             self.overhead.end("flatten", t0)
 
+    def computational_efficiency(
+        self,
+        device_flats: Optional[Dict[int, Tuple[np.ndarray, np.ndarray]]] = None,
+    ) -> Optional[float]:
+        """Measured Device Computational Efficiency from the attached
+        ``flop_model``: useful FLOPs executed (kernel launches ×
+        ``model_flops``) over peak throughput during the measured kernel
+        busy time — ``None`` without a model or kernel activity. CE is a
+        property of the kernels themselves, so the single monitor-wide
+        value annotates every region's device frame."""
+        fm = self.flop_model
+        if fm is None:
+            return None
+        peak = float(getattr(getattr(fm, "hw", None), "peak_flops", 0.0) or 0.0)
+        model_flops = float(getattr(fm, "model_flops", 0.0) or 0.0)
+        if peak <= 0 or model_flops <= 0:
+            return None
+        if device_flats is None:
+            device_flats = self._device_flats()
+        # flats are already flattened — direct sum, no revalidation
+        busy = sum(
+            float(np.sum(kern[:, 1] - kern[:, 0]))
+            for kern, _ in device_flats.values()
+        )
+        launches = sum(
+            self.devices[d].n_kernel_records for d in device_flats
+            if d in self.devices
+        )
+        if busy <= 0 or launches == 0:
+            return None
+        return (launches * model_flops) / (peak * busy)
+
     def _region_result(
         self,
         name: str,
@@ -404,7 +510,12 @@ class TalpMonitor:
             kernels.append(k_in)
             memories.append(m_in)
         dm = (
-            device_metrics(kernels, memories, elapsed)
+            device_metrics(
+                kernels, memories, elapsed,
+                computational_efficiency=self.computational_efficiency(
+                    device_flats
+                ),
+            )
             if kernels and elapsed > 0
             else None
         )

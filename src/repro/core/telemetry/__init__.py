@@ -10,6 +10,13 @@ Three pillars (see the module docstrings):
   * :mod:`.overhead` — monotonic-clock accounting of the monitor's own
     hot paths, surfaced as the optional ``talp_overhead`` report branch.
 
+Plus the step-resolution pair built on all three:
+
+  * :mod:`.stepseries` — per-region-close metric capture into a bounded
+    columnar ring (:class:`StepSeries` / :class:`StepSeriesRecorder`).
+  * :mod:`.watchdog` — online :class:`EfficiencyWatchdog` with rolling
+    EWMA/CUSUM baselines, hysteresis, and hierarchy-aware attribution.
+
 Only :mod:`.overhead` is imported eagerly: it is dependency-free and the
 core measurement modules (``states``/``talp``/``merge``) time their hot
 paths against it, so it must never pull the exporters (which import
@@ -32,8 +39,16 @@ __all__ = [
     "overhead",
     "traceexport",
     "exporter",
+    "stepseries",
+    "watchdog",
     "TelemetryExporter",
     "TelemetrySnapshot",
+    "StepSeries",
+    "StepSeriesRecorder",
+    "EfficiencyWatchdog",
+    "AnomalyEvent",
+    "validate_anomaly_events",
+    "synthetic_drift_scenario",
     "export_trace",
     "export_trace_reference",
     "export_result",
@@ -45,8 +60,16 @@ __all__ = [
 _LAZY = {
     "traceexport": (".traceexport", None),
     "exporter": (".exporter", None),
+    "stepseries": (".stepseries", None),
+    "watchdog": (".watchdog", None),
     "TelemetryExporter": (".exporter", "TelemetryExporter"),
     "TelemetrySnapshot": (".exporter", "TelemetrySnapshot"),
+    "StepSeries": (".stepseries", "StepSeries"),
+    "StepSeriesRecorder": (".stepseries", "StepSeriesRecorder"),
+    "EfficiencyWatchdog": (".watchdog", "EfficiencyWatchdog"),
+    "AnomalyEvent": (".watchdog", "AnomalyEvent"),
+    "validate_anomaly_events": (".watchdog", "validate_anomaly_events"),
+    "synthetic_drift_scenario": (".watchdog", "synthetic_drift_scenario"),
     "export_trace": (".traceexport", "export_trace"),
     "export_trace_reference": (".traceexport", "export_trace_reference"),
     "export_result": (".traceexport", "export_result"),

@@ -16,6 +16,12 @@ Prometheus family is ``talp_{hierarchy}_{spec key}`` with a ``region``
 label. Nothing here enumerates metrics — a metric registered with
 ``Hierarchy.with_child()`` appears in both outputs with no exporter
 changes, exactly like it appears in the text/JSON reports.
+
+An attached :class:`~.watchdog.EfficiencyWatchdog` is published too:
+each JSONL record carries its ``summary()`` (watched metrics, event
+count, currently-firing detectors) and the exposition gains a
+``talp_watchdog_events_total`` counter plus one ``talp_watchdog_firing``
+gauge per firing (region, metric).
 """
 
 from __future__ import annotations
@@ -73,11 +79,13 @@ class TelemetryExporter:
         monitor: TalpMonitor,
         capacity: int = 256,
         jsonl: Optional[Union[str, "object"]] = None,
+        watchdog=None,
     ):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.monitor = monitor
         self.capacity = capacity
+        self.watchdog = watchdog
         self._ring: List[TelemetrySnapshot] = []
         self._seq = 0
         self._lock = threading.Lock()
@@ -147,13 +155,16 @@ class TelemetryExporter:
             for frame in result_frames(rr):
                 entry[frame.hierarchy.name] = frame.scalar_fields()
             regions[rname] = entry
-        return {
+        record = {
             "seq": snap.seq,
             "t": snap.t,
             "wall": snap.wall,
             "name": snap.result.name,
             "regions": regions,
         }
+        if self.watchdog is not None:
+            record["watchdog"] = self.watchdog.summary()
+        return record
 
     # ------------------------------------------------------------------
     # Prometheus text exposition
@@ -202,7 +213,35 @@ class TelemetryExporter:
         out.append(
             f'talp_sample_seq{{trace="{snap.result.name}"}} {snap.seq}'
         )
+        if self.watchdog is not None:
+            s = self.watchdog.summary()
+            out.append(
+                "# HELP talp_watchdog_events_total anomaly events emitted"
+            )
+            out.append("# TYPE talp_watchdog_events_total counter")
+            out.append(
+                f'talp_watchdog_events_total'
+                f'{{trace="{snap.result.name}"}} {s["n_events"]}'
+            )
+            out.append(
+                "# HELP talp_watchdog_firing detector currently firing "
+                "(1 per firing region/metric)"
+            )
+            out.append("# TYPE talp_watchdog_firing gauge")
+            for f in s["firing"]:
+                out.append(
+                    f'talp_watchdog_firing{{region="{f["region"]}",'
+                    f'metric="{f["metric"]}",'
+                    f'trace="{snap.result.name}"}} 1'
+                )
         return "\n".join(out) + "\n"
+
+    @property
+    def port(self) -> Optional[int]:
+        """Bound HTTP port (``None`` until :meth:`serve` has been
+        called) — with ``serve(port=0)`` this is how tests discover the
+        ephemeral port."""
+        return self._http.server_address[1] if self._http is not None else None
 
     def serve(self, port: int = 0, host: str = "127.0.0.1") -> int:
         """Start the opt-in stdlib HTTP endpoint (``GET /metrics``) in a

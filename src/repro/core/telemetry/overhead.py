@@ -11,6 +11,7 @@ monitor's hot paths with monotonic-clock accumulators:
   * ``compact`` — pending-row folds into the flattened interval arrays,
   * ``flatten`` — per-device flattened-pair construction at sample time,
   * ``sample``  — online snapshot construction (includes nested work),
+  * ``step``    — per-region-close step-series capture (+ watchdog),
   * ``spool``   — spool-payload serialization + atomic publish,
   * ``export``  — Chrome-trace / metric-stream rendering.
 
@@ -43,7 +44,9 @@ __all__ = [
 ]
 
 #: Known hot-path section names (free-form names are accepted too).
-SECTIONS = ("ingest", "flush", "compact", "flatten", "sample", "spool", "export")
+SECTIONS = (
+    "ingest", "flush", "compact", "flatten", "sample", "step", "spool", "export",
+)
 
 
 class OverheadAccumulator:

@@ -15,9 +15,17 @@ so any run opens directly in Perfetto (`ui.perfetto.dev`) or
     exact, straight from the columnar interval arrays,
   * one **regions** lane (pid 3): ``B``/``E`` begin/end markers per
     monitored region,
-  * **counter tracks** (pid 4): the sampled hierarchy metrics (PE, LB,
-    CE, OE, …) over time, names derived generically from the
-    :class:`~repro.core.hierarchy.Hierarchy` specs.
+  * **counter tracks** (pid 4): the hierarchy metrics (PE, LB, CE,
+    OE, …) over time, names derived generically from the
+    :class:`~repro.core.hierarchy.Hierarchy` specs. When a
+    step-resolution :class:`~.stepseries.StepSeries` is attached the
+    counters are *per region close* (one point per step, at the window's
+    close timestamp) instead of the exporter's polling cadence — a
+    one-step spike stays visible,
+  * **anomaly markers** (pid 5): instant events (``"ph":"i"``) from the
+    :class:`~.watchdog.EfficiencyWatchdog`, one per emitted anomaly,
+    carrying the observed/baseline/z payload and the attribution path in
+    ``args``.
 
 The slice generator is **vectorized**: interval arrays (the
 ``ColumnStore``/``flatten()`` output) become JSON event lines through
@@ -60,6 +68,7 @@ __all__ = [
     "PID_DEVICE",
     "PID_REGIONS",
     "PID_COUNTERS",
+    "PID_ANOMALIES",
     "slice_lines",
     "slice_events_loop",
     "quantize_ts_us",
@@ -77,6 +86,7 @@ PID_HOST = 1
 PID_DEVICE = 2
 PID_REGIONS = 3
 PID_COUNTERS = 4
+PID_ANOMALIES = 5
 
 _US = 1e6  # trace-event timestamps are microseconds
 
@@ -317,6 +327,78 @@ def _counter_lines(
     return lines
 
 
+def _step_counter_lines(
+    step_series, t0: float, pid: int = PID_COUNTERS
+) -> List[str]:
+    """One multi-series counter event per (step row, hierarchy), at the
+    window's *close* timestamp — step-resolution counter tracks. Series
+    are grouped by the column's hierarchy prefix so the counter names
+    match the cadence-sampled ones (``talp:{hierarchy}:{region}``)."""
+    lines: List[str] = []
+    # hierarchy name -> its metric columns, preserving column order.
+    groups: Dict[str, List[Tuple[str, str]]] = {}
+    for col in step_series.metric_columns:
+        hname, _, key = col.partition("_")
+        groups.setdefault(hname, []).append((col, key))
+    for row in step_series.rows():
+        ts = float(quantize_ts_us((float(row["t_close"]) - t0) * _US))
+        rname = step_series.region_name(row["region"])
+        for hname, cols in groups.items():
+            args = {
+                key: float(row[col])
+                for col, key in cols
+                if not np.isnan(row[col])
+            }
+            if not args:
+                continue
+            lines.append(
+                json.dumps(
+                    {
+                        "name": f"talp:{hname}:{rname}",
+                        "ph": "C", "pid": pid, "tid": 0, "ts": ts,
+                        "args": args,
+                    },
+                    separators=(",", ":"),
+                )
+            )
+    return lines
+
+
+def _anomaly_lines(
+    anomalies, t0: float, pid: int = PID_ANOMALIES
+) -> List[str]:
+    """Instant events (``"ph":"i"``, process-scoped) — one marker per
+    watchdog anomaly, so degradations are visually pinned on the trace
+    timeline. Accepts :class:`~.watchdog.AnomalyEvent` objects or their
+    ``as_dict()`` payloads."""
+    lines: List[str] = []
+    for ev in anomalies:
+        d = ev.as_dict() if hasattr(ev, "as_dict") else dict(ev)
+        ts = float(quantize_ts_us((float(d["t"]) - t0) * _US))
+        lines.append(
+            json.dumps(
+                {
+                    "name": f"talp:anomaly:{d['hierarchy']}:{d['metric']}",
+                    "cat": "anomaly", "ph": "i", "s": "p",
+                    "pid": pid, "tid": 0, "ts": ts,
+                    "args": {
+                        "region": d["region"],
+                        "step": d["step"],
+                        "observed": d["observed"],
+                        "baseline_mean": d["baseline_mean"],
+                        "z": d["z"],
+                        "direction": d["direction"],
+                        "attribution": " -> ".join(
+                            a["metric"] for a in d.get("attribution", ())
+                        ),
+                    },
+                },
+                separators=(",", ":"),
+            )
+        )
+    return lines
+
+
 def _assemble(lines: List[str], name: str) -> str:
     return (
         '{"traceEvents":[' + ",".join(lines) + '],"displayTimeUnit":"ms",'
@@ -335,6 +417,8 @@ def _build(
     device_lanes: Dict[int, Tuple[np.ndarray, np.ndarray]],
     region_windows: Dict[str, np.ndarray],
     samples: Optional[Sequence[Tuple[float, TalpResult]]] = None,
+    step_series=None,
+    anomalies=None,
 ) -> str:
     lines: List[str] = [
         _meta_line("process_name", PID_HOST, "host ranks"),
@@ -342,8 +426,10 @@ def _build(
     ]
     if region_windows:
         lines.append(_meta_line("process_name", PID_REGIONS, "talp regions"))
-    if samples:
+    if samples or (step_series is not None and len(step_series)):
         lines.append(_meta_line("process_name", PID_COUNTERS, "talp metrics"))
+    if anomalies:
+        lines.append(_meta_line("process_name", PID_ANOMALIES, "talp anomalies"))
     for rank in sorted(host_states):
         lines.append(_meta_line("thread_name", PID_HOST, f"rank {rank}", rank))
         for display, iv in _host_state_intervals(host_states[rank], t0):
@@ -354,8 +440,14 @@ def _build(
         lines.extend(_device_lane_lines(dev, kern, mem, t0))
     if region_windows:
         lines.extend(_region_marker_lines(region_windows, t0))
-    if samples:
+    if step_series is not None and len(step_series):
+        # Step-resolution counters supersede the polling-cadence ones:
+        # one point per region close, nothing averaged away.
+        lines.extend(_step_counter_lines(step_series, t0))
+    elif samples:
         lines.extend(_counter_lines(samples, t0))
+    if anomalies:
+        lines.extend(_anomaly_lines(anomalies, t0))
     return _assemble(lines, name)
 
 
@@ -467,10 +559,14 @@ def export_monitor(
     mon: TalpMonitor,
     result: Optional[TalpResult] = None,
     samples: Optional[Sequence[Tuple[float, TalpResult]]] = None,
+    step_series=None,
+    anomalies=None,
 ) -> str:
     """Render a live (or finalized) monitor with *exact* region windows
     and device records — everything shares the monitor's clock domain, so
-    region markers align with device slices."""
+    region markers align with device slices. A ``step_series`` switches
+    the counter tracks to step resolution (superseding ``samples``);
+    ``anomalies`` adds watchdog instant markers."""
     with _ovh.section("export"):
         if result is None:
             result = mon.sample_result()
@@ -486,6 +582,7 @@ def export_monitor(
         return _build(
             result.name, t0, host_states, device_lanes,
             region_windows, samples,
+            step_series=step_series, anomalies=anomalies,
         )
 
 
@@ -536,7 +633,8 @@ def validate_chrome_trace(
     default tolerance covers the exporter's ±0.5 ns ``ts`` quantization
     on both neighbors); ``B``/``E`` markers are balanced per lane and
     name with depth never going negative; counters carry numeric series
-    args.
+    args; instant events (``"i"``) carry a name, a numeric ``ts`` and a
+    valid scope.
     """
     try:
         payload = json.loads(text)
@@ -549,7 +647,7 @@ def validate_chrome_trace(
     marker_depth: Dict[Tuple[int, int], int] = {}
     marker_last_ts: Dict[Tuple[int, int], float] = {}
     marker_open: Dict[Tuple[int, int, str], int] = {}
-    counts = {"X": 0, "B": 0, "E": 0, "C": 0, "M": 0}
+    counts = {"X": 0, "B": 0, "E": 0, "C": 0, "M": 0, "i": 0}
     for i, ev in enumerate(events):
         if not isinstance(ev, dict) or "ph" not in ev:
             raise ValueError(f"event {i}: missing required field 'ph'")
@@ -591,6 +689,17 @@ def validate_chrome_trace(
             marker_open[nkey] = marker_open.get(nkey, 0) + (
                 1 if ph == "B" else -1
             )
+        elif ph == "i":
+            if not isinstance(ev.get("ts"), (int, float)):
+                raise ValueError(
+                    f"event {i}: instant event missing numeric 'ts'"
+                )
+            if "name" not in ev:
+                raise ValueError(f"event {i}: instant event missing 'name'")
+            if ev.get("s", "t") not in ("t", "p", "g"):
+                raise ValueError(
+                    f"event {i}: instant event scope {ev.get('s')!r} invalid"
+                )
         elif ph == "C":
             if not isinstance(ev.get("ts"), (int, float)):
                 raise ValueError(f"event {i}: counter missing numeric 'ts'")

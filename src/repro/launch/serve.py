@@ -17,18 +17,19 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from contextlib import nullcontext
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config, list_configs, smoke_config
+from ..configs import ShapeConfig, get_config, list_configs, smoke_config
 from ..core.backends import RuntimeBackend
 from ..core.merge import FileSpoolTransport, emit_job_report
 from ..core.report import render_tables, to_json
 from ..core.talp import TalpMonitor
 from ..models import lm
-from .steps import make_prefill_step, make_serve_step
+from .steps import make_prefill_step, make_serve_step, model_flops
 
 __all__ = ["serve", "main"]
 
@@ -49,6 +50,9 @@ def serve(
     talp_trace_out: str = None,
     talp_metrics_jsonl: str = None,
     talp_prometheus_port: int = None,
+    talp_step_series: int = 0,
+    talp_watchdog: bool = False,
+    talp_anomaly_log: str = None,
 ):
     """Serve a batch of requests. Multi-rank serving fleets: pass
     ``rank``/``world_size`` and a shared ``talp_spool`` dir to get one
@@ -60,10 +64,38 @@ def serve(
     ``talp_trace_out`` (Chrome/Perfetto trace at exit),
     ``talp_metrics_jsonl`` (snapshot stream), ``talp_prometheus_port``
     (opt-in ``/metrics`` endpoint — the natural fit for a long-lived
-    serving process)."""
+    serving process). ``talp_step_series``/``talp_watchdog``/
+    ``talp_anomaly_log`` mirror the training driver at decode-token
+    resolution: each decode iteration runs in a nested ``decode_step``
+    region whose close feeds the per-step ring and the anomaly
+    watchdog. The decode-shape FLOP estimate feeds the measured
+    Computational Efficiency annotation."""
     backend = RuntimeBackend()
+    want_steps = bool(talp_step_series or talp_watchdog or talp_anomaly_log)
+    flop_model = None
+    if want_steps:
+        from ..core.backends.analytical import StepModel
+
+        shape = ShapeConfig(name="serve", seq_len=prompt_len + gen_len,
+                            global_batch=requests, kind="decode")
+        flop_model = StepModel(
+            flops=0.0, hbm_bytes=0.0, collective_bytes=0.0,
+            model_flops=model_flops(cfg, shape) / max(world_size, 1),
+        )
     mon = TalpMonitor("serve", rank=rank, backend=backend,
-                      overhead_report=True)
+                      overhead_report=True, flop_model=flop_model)
+    step_recorder = step_watchdog = None
+    if want_steps:
+        from ..core.telemetry.stepseries import StepSeriesRecorder
+
+        if talp_watchdog or talp_anomaly_log:
+            from ..core.telemetry.watchdog import EfficiencyWatchdog
+
+            step_watchdog = EfficiencyWatchdog(jsonl=talp_anomaly_log)
+        step_recorder = StepSeriesRecorder(
+            mon, capacity=talp_step_series or 4096,
+            regions=("decode_step",), watchdog=step_watchdog,
+        )
     sample_transport = (
         FileSpoolTransport(talp_spool, world_size=world_size,
                            payload=talp_spool_format)
@@ -73,7 +105,8 @@ def serve(
     if talp_metrics_jsonl or talp_prometheus_port is not None or talp_trace_out:
         from ..core.telemetry.exporter import TelemetryExporter
 
-        telemetry = TelemetryExporter(mon, jsonl=talp_metrics_jsonl)
+        telemetry = TelemetryExporter(mon, jsonl=talp_metrics_jsonl,
+                                      watchdog=step_watchdog)
         if talp_prometheus_port is not None:
             port = telemetry.serve(port=talp_prometheus_port)
             if verbose:
@@ -129,21 +162,26 @@ def serve(
     tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
     with mon.region("decode"):
         for t in range(gen_len):
-            tokens_out.append(np.asarray(tok))
-            if cfg.frontend == "token":
-                inp = tok[:, None]
-            else:  # embed-frontend stub: feed a frame embedding
-                inp = jnp.zeros((requests, 1, cfg.d_model), jnp.bfloat16)
-            h = backend.launch(decode_fn, params, inp, pos, caches,
-                               name=f"decode_{t}")
-            with mon.offload():
-                logits, caches, pos = backend.wait(h)
-            tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
+            with (mon.region("decode_step") if step_recorder is not None
+                  else nullcontext()):
+                tokens_out.append(np.asarray(tok))
+                if cfg.frontend == "token":
+                    inp = tok[:, None]
+                else:  # embed-frontend stub: feed a frame embedding
+                    inp = jnp.zeros((requests, 1, cfg.d_model), jnp.bfloat16)
+                h = backend.launch(decode_fn, params, inp, pos, caches,
+                                   name=f"decode_{t}")
+                with mon.offload():
+                    logits, caches, pos = backend.wait(h)
+                tok = jnp.argmax(
+                    logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
             if talp_sample_every and (t + 1) % talp_sample_every == 0:
                 sample_snapshot(f"token {t}")
 
     if telemetry is not None:
         telemetry.sample()  # last stream record covers the full window
+    if step_recorder is not None:
+        step_recorder.close()   # detach before finalize's Global close
     result = mon.finalize()
     if talp_trace_out:
         from ..core.telemetry.traceexport import export_monitor
@@ -152,6 +190,10 @@ def serve(
             f.write(export_monitor(
                 mon, result=result,
                 samples=telemetry.trace_samples() if telemetry else None,
+                step_series=(step_recorder.series
+                             if step_recorder is not None else None),
+                anomalies=(step_watchdog.events
+                           if step_watchdog is not None else None),
             ))
         if verbose:
             print(f"[talp] wrote Chrome trace: {talp_trace_out}")
@@ -159,12 +201,21 @@ def serve(
         telemetry.close()
     if verbose:
         print(render_tables(result))
+        if step_watchdog is not None and step_watchdog.events:
+            print(f"[talp watchdog] {len(step_watchdog.events)} anomaly "
+                  f"event(s); first: {step_watchdog.events[0].as_dict()}")
     if talp_json:
         with open(talp_json, "w") as f:
             f.write(to_json(result))
+    if talp_spool and step_recorder is not None:
+        steps_transport = sample_transport or FileSpoolTransport(
+            talp_spool, world_size=world_size, payload=talp_spool_format)
+        steps_transport.submit_steps(step_recorder.series, rank=rank)
     if talp_spool:
         emit_job_report(result, talp_spool, rank, world_size, verbose=verbose,
                         payload=talp_spool_format, timelines=mon.devices)
+    if step_watchdog is not None:
+        step_watchdog.close()
     return np.stack(tokens_out, axis=1), result
 
 
@@ -192,6 +243,15 @@ def main():
     ap.add_argument("--talp-prometheus-port", type=int, default=None,
                     help="serve the latest snapshot as Prometheus text "
                          "(0 = ephemeral port)")
+    ap.add_argument("--talp-step-series", type=int, default=0,
+                    help="keep the last N per-decode-step metric rows "
+                         "(columnar ring; spooled with --talp-spool)")
+    ap.add_argument("--talp-watchdog", action="store_true",
+                    help="run the online efficiency anomaly watchdog over "
+                         "per-decode-step rows (implies a step series)")
+    ap.add_argument("--talp-anomaly-log", default=None,
+                    help="stream watchdog anomaly events as JSONL "
+                         "(implies --talp-watchdog)")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     args = ap.parse_args()
@@ -204,7 +264,10 @@ def main():
                       talp_spool_format=args.talp_spool_format,
                       talp_trace_out=args.talp_trace_out,
                       talp_metrics_jsonl=args.talp_metrics_jsonl,
-                      talp_prometheus_port=args.talp_prometheus_port)
+                      talp_prometheus_port=args.talp_prometheus_port,
+                      talp_step_series=args.talp_step_series,
+                      talp_watchdog=args.talp_watchdog,
+                      talp_anomaly_log=args.talp_anomaly_log)
     dt = time.time() - t0
     n = tokens.size
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

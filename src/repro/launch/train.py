@@ -24,13 +24,14 @@ import dataclasses
 import json
 import sys
 import time
+from contextlib import nullcontext
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
-from ..configs import get_config, list_configs, smoke_config
+from ..configs import ShapeConfig, get_config, list_configs, smoke_config
 from ..core.backends import RuntimeBackend
 from ..core.merge import FileSpoolTransport, emit_job_report
 from ..core.report import render_tables, to_json
@@ -38,7 +39,9 @@ from ..core.talp import TalpMonitor
 from ..data.pipeline import DataConfig, SyntheticTokenPipeline
 from ..optim.adamw import AdamWConfig
 from ..runtime.fault_tolerance import StragglerDetector
-from .steps import init_train_state, make_train_step, train_state_shapes
+from .steps import (
+    init_train_state, make_train_step, model_flops, train_state_shapes,
+)
 
 __all__ = ["train", "main"]
 
@@ -64,6 +67,9 @@ def train(
     talp_trace_out: str = None,
     talp_metrics_jsonl: str = None,
     talp_prometheus_port: int = None,
+    talp_step_series: int = 0,
+    talp_watchdog: bool = False,
+    talp_anomaly_log: str = None,
 ):
     """Train a (usually reduced) config; returns (state, history, talp).
 
@@ -83,11 +89,43 @@ def train(
     one JSON line; ``talp_prometheus_port`` serves the latest snapshot
     as Prometheus text on ``/metrics`` (0 = ephemeral port). The report
     carries the measured ``talp_overhead`` annotation.
+
+    Per-step attribution: ``talp_step_series=N`` keeps the last N
+    per-step metric rows (a ``step`` region wraps each iteration and its
+    close is captured into a columnar ring; with a ``talp_spool`` the
+    ring is spooled and rank-aligned into a job-level per-step table).
+    ``talp_watchdog`` runs the online anomaly watchdog over those rows;
+    ``talp_anomaly_log`` streams its events as JSONL (either implies the
+    step series). The step model's FLOP estimate feeds the measured
+    Computational Efficiency annotation.
     """
     opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10, total_steps=steps)
     backend = RuntimeBackend()
+    want_steps = bool(talp_step_series or talp_watchdog or talp_anomaly_log)
+    flop_model = None
+    if want_steps:
+        from ..core.backends.analytical import StepModel
+
+        shape = ShapeConfig(name="train", seq_len=seq_len,
+                            global_batch=global_batch, kind="train")
+        flop_model = StepModel(
+            flops=0.0, hbm_bytes=0.0, collective_bytes=0.0,
+            model_flops=model_flops(cfg, shape) / max(world_size, 1),
+        )
     mon = TalpMonitor("train", rank=rank, backend=backend,
-                      overhead_report=True)
+                      overhead_report=True, flop_model=flop_model)
+    step_recorder = step_watchdog = None
+    if want_steps:
+        from ..core.telemetry.stepseries import StepSeriesRecorder
+
+        if talp_watchdog or talp_anomaly_log:
+            from ..core.telemetry.watchdog import EfficiencyWatchdog
+
+            step_watchdog = EfficiencyWatchdog(jsonl=talp_anomaly_log)
+        step_recorder = StepSeriesRecorder(
+            mon, capacity=talp_step_series or 4096,
+            regions=("step",), watchdog=step_watchdog,
+        )
     sample_transport = (
         FileSpoolTransport(talp_spool, world_size=world_size,
                            payload=talp_spool_format)
@@ -97,7 +135,8 @@ def train(
     if talp_metrics_jsonl or talp_prometheus_port is not None or talp_trace_out:
         from ..core.telemetry.exporter import TelemetryExporter
 
-        telemetry = TelemetryExporter(mon, jsonl=talp_metrics_jsonl)
+        telemetry = TelemetryExporter(mon, jsonl=talp_metrics_jsonl,
+                                      watchdog=step_watchdog)
         if talp_prometheus_port is not None:
             port = telemetry.serve(port=talp_prometheus_port)
             if verbose:
@@ -136,17 +175,22 @@ def train(
             t0 = time.perf_counter()
             if fail_at_step is not None and step == fail_at_step:
                 raise RuntimeError(f"injected failure at step {step}")
-            # host Useful: data synthesis (prefetch keeps this short)
-            batch = data.batch_at(step)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            # Offload: dispatch + block (async launch → kernel record)
-            handle = backend.launch(step_fn, state, batch, name="train_step")
-            with mon.offload():
-                state, metrics = backend.wait(handle)
-            if manager is not None and (step + 1) % ckpt_every == 0:
-                # snapshot is sync (short), file write is async
-                with mon.mpi():   # control-plane barrier analogue
-                    manager.save(step, state)
+            # A nested per-step region only when the step series is on:
+            # its close is what the recorder/watchdog capture.
+            with (mon.region("step") if step_recorder is not None
+                  else nullcontext()):
+                # host Useful: data synthesis (prefetch keeps this short)
+                batch = data.batch_at(step)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                # Offload: dispatch + block (async launch → kernel record)
+                handle = backend.launch(step_fn, state, batch,
+                                        name="train_step")
+                with mon.offload():
+                    state, metrics = backend.wait(handle)
+                if manager is not None and (step + 1) % ckpt_every == 0:
+                    # snapshot is sync (short), file write is async
+                    with mon.mpi():   # control-plane barrier analogue
+                        manager.save(step, state)
             dt = time.perf_counter() - t0
             detector.observe(step, dt)
             history.append(
@@ -190,6 +234,8 @@ def train(
         # Final snapshot while the monitor still runs: the stream's last
         # record and the post-mortem report describe the same window.
         telemetry.sample()
+    if step_recorder is not None:
+        step_recorder.close()   # detach before finalize's Global close
     result = mon.finalize()
     if talp_trace_out:
         from ..core.telemetry.traceexport import export_monitor
@@ -198,6 +244,10 @@ def train(
             f.write(export_monitor(
                 mon, result=result,
                 samples=telemetry.trace_samples() if telemetry else None,
+                step_series=(step_recorder.series
+                             if step_recorder is not None else None),
+                anomalies=(step_watchdog.events
+                           if step_watchdog is not None else None),
             ))
         if verbose:
             print(f"[talp] wrote Chrome trace: {talp_trace_out}")
@@ -207,12 +257,21 @@ def train(
         print(render_tables(result))
         if detector.events:
             print(f"straggler events at steps: {detector.events}")
+        if step_watchdog is not None and step_watchdog.events:
+            print(f"[talp watchdog] {len(step_watchdog.events)} anomaly "
+                  f"event(s); first: {step_watchdog.events[0].as_dict()}")
     if talp_json:
         with open(talp_json, "w") as f:
             f.write(to_json(result))
+    if talp_spool and step_recorder is not None:
+        steps_transport = sample_transport or FileSpoolTransport(
+            talp_spool, world_size=world_size, payload=talp_spool_format)
+        steps_transport.submit_steps(step_recorder.series, rank=rank)
     if talp_spool:
         emit_job_report(result, talp_spool, rank, world_size, verbose=verbose,
                         payload=talp_spool_format, timelines=mon.devices)
+    if step_watchdog is not None:
+        step_watchdog.close()
     return state, history, result
 
 
@@ -246,6 +305,15 @@ def main():
     ap.add_argument("--talp-prometheus-port", type=int, default=None,
                     help="serve the latest snapshot as Prometheus text on "
                          "this port (0 = ephemeral)")
+    ap.add_argument("--talp-step-series", type=int, default=0,
+                    help="keep the last N per-step metric rows (columnar "
+                         "ring; spooled + rank-aligned with --talp-spool)")
+    ap.add_argument("--talp-watchdog", action="store_true",
+                    help="run the online efficiency anomaly watchdog over "
+                         "the per-step rows (implies a step series)")
+    ap.add_argument("--talp-anomaly-log", default=None,
+                    help="stream watchdog anomaly events as JSONL to this "
+                         "file (implies --talp-watchdog)")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     ap.add_argument("--history-json", default=None)
@@ -269,6 +337,9 @@ def main():
         talp_trace_out=args.talp_trace_out,
         talp_metrics_jsonl=args.talp_metrics_jsonl,
         talp_prometheus_port=args.talp_prometheus_port,
+        talp_step_series=args.talp_step_series,
+        talp_watchdog=args.talp_watchdog,
+        talp_anomaly_log=args.talp_anomaly_log,
     )
     if args.history_json:
         with open(args.history_json, "w") as f:

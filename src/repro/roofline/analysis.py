@@ -168,6 +168,23 @@ class RooflineReport:
             return 0.0
         return max(self.compute_s, self.memory_s, self.collective_s) / self.step_s
 
+    def step_model(self):
+        """Bridge to the analytical execution model: a per-device
+        :class:`~repro.core.backends.analytical.StepModel` carrying this
+        report's roofline estimates. Feed it (or the report itself — both
+        expose ``model_flops``/``hw``) to ``TalpMonitor(flop_model=...)``
+        so the runtime's measured Computational Efficiency uses the same
+        FLOP model the static analysis does."""
+        from ..core.backends.analytical import StepModel
+
+        return StepModel(
+            flops=self.flops,
+            hbm_bytes=self.hbm_bytes,
+            collective_bytes=self.collective_bytes,
+            model_flops=self.model_flops,
+            hw=self.hw,
+        )
+
     def to_dict(self) -> Dict:
         d = {
             k: v for k, v in asdict(self).items() if k != "hw"

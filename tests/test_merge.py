@@ -299,3 +299,95 @@ def test_allgather_transport_single_process_fallback():
     assert json.loads(to_json(job)) == json.loads(
         to_json(merge_results([res], name="job"))
     )
+
+
+def test_allgather_gather_sample_single_process_fallback():
+    """gather_sample degenerates to a local merge_samples on one process,
+    and the mid-run snapshot algebra agrees with the finalized merge."""
+    from repro.core.merge import merge_samples
+
+    clk = FakeClock()
+    mon = TalpMonitor("rank0", clock=clk)
+    mon.open_region("step")
+    clk.advance(1.0)
+    with mon.offload():
+        clk.advance(0.5)
+    mon.add_device_record(0, DeviceActivity.KERNEL, 1.0, 1.4)
+    # mid-run: region still open when the snapshot is taken
+    snap = mon.sample_result()
+    job_snap = AllGatherTransport().gather_sample(snap, name="job")
+    assert json.loads(to_json(job_snap)) == json.loads(
+        to_json(merge_samples([snap], name="job"))
+    )
+    for rr in job_snap.regions.values():
+        rr.host.validate()
+        if rr.device is not None:
+            rr.device.validate()
+    # nothing happens after the snapshot, so the finalized merge agrees
+    mon.close_region("step")
+    final = merge_results([mon.finalize()], name="job")
+    g_snap = job_snap["step"]
+    g_final = final["step"]
+    assert g_snap.elapsed == pytest.approx(g_final.elapsed)
+    assert g_snap.host.parallel_efficiency == pytest.approx(
+        g_final.host.parallel_efficiency)
+    assert g_snap.device.parallel_efficiency == pytest.approx(
+        g_final.device.parallel_efficiency)
+
+
+# ---------------------------------------------------------------------------
+# computational-efficiency carry through merge + JSON
+# ---------------------------------------------------------------------------
+def _ce_rank_result(rank, kernel, model_flops=1e12, peak=100e12):
+    """One rank with a flop model attached: CE = launches*model_flops /
+    (peak * busy), one launch of ``kernel`` seconds here."""
+    from repro.core.backends.analytical import HardwareSpec, StepModel
+
+    clk = FakeClock()
+    fm = StepModel(flops=0.0, hbm_bytes=0.0, collective_bytes=0.0,
+                   model_flops=model_flops,
+                   hw=HardwareSpec(name="t", peak_flops=peak))
+    mon = TalpMonitor(f"rank{rank}", rank=rank, clock=clk, flop_model=fm)
+    with mon.region("step"):
+        mon.add_device_record(0, DeviceActivity.KERNEL, 0.0, kernel)
+        clk.advance(1.0)
+    return mon.finalize()
+
+
+def test_merged_computational_efficiency_is_busy_weighted():
+    """Job-level CE is the kernel-busy-weighted mean of per-rank CE —
+    total useful FLOPs over total busy-time throughput — not the plain
+    mean of the per-rank ratios."""
+    r0 = _ce_rank_result(0, kernel=0.4)   # CE = 1e12/(100e12*0.4) = 0.025
+    r1 = _ce_rank_result(1, kernel=0.1)   # CE = 0.1
+    ce0 = r0["step"].device.computational_efficiency
+    ce1 = r1["step"].device.computational_efficiency
+    assert ce0 == pytest.approx(0.025)
+    assert ce1 == pytest.approx(0.1)
+    job = merge_results([r0, r1], name="job")
+    merged = job["step"].device.computational_efficiency
+    assert merged == pytest.approx((ce0 * 0.4 + ce1 * 0.1) / 0.5)   # 0.04
+    assert merged != pytest.approx((ce0 + ce1) / 2.0)               # 0.0625
+    job["step"].device.validate()
+
+
+def test_computational_efficiency_json_round_trip():
+    """CE is a measurement (not derivable from the reduced states), so
+    the JSON path must trust it from the payload — and a merge of
+    round-tripped payloads must equal the direct merge."""
+    r0 = _ce_rank_result(0, kernel=0.4)
+    r1 = _ce_rank_result(1, kernel=0.1)
+    back0 = talp_result_from_json(to_json(r0))
+    assert back0["step"].device.computational_efficiency == pytest.approx(
+        r0["step"].device.computational_efficiency)
+    via_json = merge_results(
+        [talp_result_from_json(to_json(r)) for r in (r0, r1)], name="job")
+    direct = merge_results([r0, r1], name="job")
+    assert via_json["step"].device.computational_efficiency == pytest.approx(
+        direct["step"].device.computational_efficiency)
+
+
+def test_merge_without_flop_model_has_no_ce():
+    job = merge_results(
+        [make_rank_result(0, 1.0, 0.5, 0.0, kernel=0.4)], name="job")
+    assert job["step"].device.computational_efficiency is None

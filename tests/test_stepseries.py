@@ -1,0 +1,334 @@
+"""Step-resolution metric series: ring semantics, per-window recording
+through the monitor's region-close hook, spool round trip, and the
+rank-aligned job-level step merge."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.backends.analytical import HardwareSpec, StepModel
+from repro.core.hierarchy import HOST, MetricSpec, StateDurations
+from repro.core.merge import FileSpoolTransport, merge_step_series
+from repro.core.states import DeviceActivity
+from repro.core.talp import TalpMonitor
+from repro.core.telemetry.stepseries import (
+    BASE_FIELDS,
+    DEFAULT_HIERARCHIES,
+    StepSeries,
+    StepSeriesRecorder,
+    metric_columns_of,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _monitor(**kw):
+    clk = FakeClock()
+    mon = TalpMonitor("run", clock=clk, auto_start=True, **kw)
+    return clk, mon
+
+
+def _assert_rows_equal(a, b):
+    """Field-wise equality for structured row arrays (NaN == NaN)."""
+    assert (a.dtype.names or ()) == (b.dtype.names or ())
+    for f in a.dtype.names or ():
+        np.testing.assert_array_equal(a[f], b[f], err_msg=f"field {f!r}")
+
+
+# ---------------------------------------------------------------------------
+# schema generality
+# ---------------------------------------------------------------------------
+def test_metric_columns_prefixed_per_hierarchy():
+    cols = metric_columns_of(DEFAULT_HIERARCHIES)
+    assert "host_parallel_efficiency" in cols
+    assert "device_load_balance" in cols
+    # every column carries its hierarchy prefix
+    assert all(c.startswith(("host_", "device_")) for c in cols)
+
+
+def test_with_child_metric_becomes_a_column():
+    hier = HOST.with_child(
+        "device_offload_efficiency",
+        MetricSpec("queue_depth_eff", "Queue Depth Eff.",
+                   lambda sd, dep: 0.25, multiplicative=False),
+    )
+    s = StepSeries(capacity=4, hierarchies=(hier,))
+    assert "host_queue_depth_eff" in s.metric_columns
+    s.append("step", 0, 0.0, 1.0, values={"host_queue_depth_eff": 0.25})
+    assert s.column("host_queue_depth_eff")[0] == 0.25
+
+
+def test_append_missing_values_are_nan_and_unknown_keys_ignored():
+    s = StepSeries(capacity=4)
+    s.append("step", 0, 0.0, 1.0,
+             values={"host_parallel_efficiency": 0.5, "no_such_column": 9.0})
+    assert s.column("host_parallel_efficiency")[0] == 0.5
+    assert math.isnan(s.column("device_load_balance")[0])
+    assert "no_such_column" not in (s.rows().dtype.names or ())
+
+
+# ---------------------------------------------------------------------------
+# bounded ring
+# ---------------------------------------------------------------------------
+def test_ring_wraparound_keeps_newest_and_counts_dropped():
+    s = StepSeries(capacity=4)
+    for i in range(10):
+        s.append("step", i, float(i), float(i) + 0.5)
+    assert len(s) == 4
+    assert s.n_total == 10
+    assert s.n_dropped == 6
+    rows = s.rows()
+    # chronological order, oldest retained row first
+    assert list(rows["step"]) == [6, 7, 8, 9]
+    assert np.all(rows["elapsed"] == 0.5)
+
+
+def test_capacity_must_be_positive():
+    with pytest.raises(ValueError, match="capacity"):
+        StepSeries(capacity=0)
+
+
+def test_column_region_filter():
+    s = StepSeries(capacity=8)
+    s.append("a", 0, 0.0, 1.0)
+    s.append("b", 0, 1.0, 3.0)
+    s.append("a", 1, 3.0, 4.0)
+    assert list(s.column("elapsed", region="a")) == [1.0, 1.0]
+    assert list(s.column("elapsed", region="b")) == [2.0]
+    assert s.region_names == ("a", "b")
+
+
+# ---------------------------------------------------------------------------
+# recorder: per-window deltas, device columns, lifecycle
+# ---------------------------------------------------------------------------
+def test_recorder_rows_carry_per_window_deltas_not_cumulative():
+    clk, mon = _monitor()
+    rec = StepSeriesRecorder(mon, capacity=16)
+    mpis = [0.1, 0.3, 0.2]
+    for mpi_s in mpis:
+        with mon.region("step"):
+            clk.advance(0.5)                      # useful
+            with mon.mpi():
+                clk.advance(mpi_s)
+    rows = rec.series.column("mpi", region="step")
+    # each row is exactly that window's delta, not the running total
+    assert rows == pytest.approx(mpis)
+    assert rec.series.column("useful", region="step") == pytest.approx(
+        [0.5] * 3)
+    assert list(rec.series.column("step", region="step")) == [0, 1, 2]
+    mon.finalize()
+
+
+def test_recorder_host_metrics_match_hierarchy_engine():
+    clk, mon = _monitor()
+    rec = StepSeriesRecorder(mon, capacity=16)
+    with mon.region("step"):
+        clk.advance(0.6)
+        with mon.offload():
+            clk.advance(0.3)
+        with mon.mpi():
+            clk.advance(0.1)
+    row = rec.series.rows()[0]
+    sd = StateDurations(elapsed=1.0, useful=[0.6], offload=[0.3], mpi=[0.1])
+    expect = HOST.compute(sd).values
+    for key, val in expect.items():
+        got = float(row[f"host_{key}"])
+        if val is None:
+            assert math.isnan(got)
+        else:
+            assert got == pytest.approx(val)
+    mon.finalize()
+
+
+def test_recorder_device_columns_windowed_and_ce_extra():
+    peak, model_flops = 100e12, 1e12
+    fm = StepModel(flops=0.0, hbm_bytes=0.0, collective_bytes=0.0,
+                   model_flops=model_flops,
+                   hw=HardwareSpec(name="t", peak_flops=peak))
+    clk, mon = _monitor(flop_model=fm)
+    rec = StepSeriesRecorder(mon, capacity=16)
+    busies = [(0.4, 0.2), (0.3, 0.3)]   # (dev0, dev1) kernel busy per step
+    for k0, k1 in busies:
+        with mon.region("step"):
+            t0 = clk.t
+            mon.add_device_record(0, DeviceActivity.KERNEL, t0, t0 + k0)
+            mon.add_device_record(1, DeviceActivity.KERNEL, t0, t0 + k1)
+            clk.advance(1.0)
+    rows = rec.series.rows()
+    # per-window device load balance: mean(busy)/max(busy) inside the step
+    lb = rows["device_load_balance"]
+    assert lb[0] == pytest.approx(0.3 / 0.4)
+    assert lb[1] == pytest.approx(1.0)
+    # CE annotation comes from the monitor's flop model (cumulative over
+    # the flattened timelines at that close)
+    ce = rows["device_computational_efficiency"]
+    assert np.isfinite(ce).all()
+    # at the first close: 2 launches, busy = 0.6 s
+    assert ce[0] == pytest.approx(2 * model_flops / (peak * 0.6))
+    mon.finalize()
+
+
+def test_recorder_region_filter_and_nested_regions():
+    clk, mon = _monitor()
+    rec = StepSeriesRecorder(mon, capacity=16, regions=("inner",))
+    with mon.region("outer"):
+        for _ in range(3):
+            with mon.region("inner"):
+                clk.advance(0.1)
+        clk.advance(0.2)
+    assert len(rec.series) == 3
+    assert rec.series.region_names == ("inner",)
+    mon.finalize()
+
+
+def test_recorder_close_detaches_idempotently():
+    clk, mon = _monitor()
+    rec = StepSeriesRecorder(mon, capacity=16)
+    with mon.region("step"):
+        clk.advance(0.1)
+    rec.close()
+    rec.close()   # idempotent
+    with mon.region("step"):
+        clk.advance(0.1)
+    assert len(rec.series) == 1
+    mon.finalize()
+
+
+def test_recorder_cost_charged_to_step_overhead_section():
+    clk, mon = _monitor(overhead_report=True)
+    StepSeriesRecorder(mon, capacity=16)
+    n = 5
+    for _ in range(n):
+        with mon.region("step"):
+            clk.advance(0.1)
+    assert mon.overhead.counts["step"] == n
+    assert mon.overhead.totals["step"] >= 0.0
+    res = mon.finalize()
+    assert res.regions[TalpMonitor.GLOBAL].host.talp_overhead is not None
+
+
+def test_recorder_zero_elapsed_window_skipped():
+    clk, mon = _monitor()
+    rec = StepSeriesRecorder(mon, capacity=16)
+    with mon.region("step"):
+        pass   # clock does not move
+    assert len(rec.series) == 0
+    mon.finalize()
+
+
+# ---------------------------------------------------------------------------
+# spool round trip
+# ---------------------------------------------------------------------------
+def test_to_arrays_from_arrays_round_trip_preserves_everything():
+    s = StepSeries(capacity=3)
+    for i in range(5):   # wraps: rows 2..4 retained, 2 dropped
+        s.append("step" if i % 2 == 0 else "other", i, float(i), i + 1.0,
+                 useful=0.5, offload=0.3, mpi=0.2,
+                 values={"host_parallel_efficiency": 0.9})
+    back = StepSeries.from_arrays(**s.to_arrays())
+    assert len(back) == len(s) == 3
+    assert back.n_total == 5 and back.n_dropped == 2
+    assert back.region_names == s.region_names
+    assert back.metric_columns == s.metric_columns
+    _assert_rows_equal(back.rows(), s.rows())
+    # region filtering still works on the reconstructed series
+    assert list(back.column("step", region="other")) == [3]
+
+
+def test_as_table_renders_rows_and_nan_dash():
+    s = StepSeries(capacity=4)
+    s.append("step", 0, 0.0, 1.0, values={"host_parallel_efficiency": 0.75})
+    text = s.as_table()
+    assert "host_parallel_efficiency" in text
+    assert "0.7500" in text
+    assert "-" in text   # NaN metric renders as a dash
+
+
+# ---------------------------------------------------------------------------
+# job-level step merge
+# ---------------------------------------------------------------------------
+def _rank_series(useful_by_step, offload=0.2, mpi=0.1, device_lb=None):
+    s = StepSeries(capacity=16)
+    t = 0.0
+    for i, u in enumerate(useful_by_step):
+        vals = {}
+        if device_lb is not None:
+            vals["device_load_balance"] = device_lb[i]
+        s.append("step", i, t, t + 1.0, useful=u, offload=offload, mpi=mpi,
+                 values=vals)
+        t += 1.0
+    return s
+
+
+def test_merge_step_series_recomputes_host_not_averages():
+    # asymmetric ranks: recomputed job-level load balance differs from the
+    # mean of the (identical, per-rank-trivial) rank values
+    s0 = _rank_series([0.7, 0.7])
+    s1 = _rank_series([0.3, 0.5])
+    job = merge_step_series({0: s0, 1: s1})
+    rows = job.rows()
+    assert list(rows["n_ranks"]) == [2.0, 2.0]
+    # base durations are across-rank sums
+    assert rows["useful"] == pytest.approx([1.0, 1.2])
+    for i, (u0, u1) in enumerate([(0.7, 0.3), (0.7, 0.5)]):
+        sd = StateDurations(elapsed=1.0, useful=[u0, u1],
+                            offload=[0.2, 0.2], mpi=[0.1, 0.1])
+        expect = HOST.compute(sd).values
+        assert float(rows["host_load_balance"][i]) == pytest.approx(
+            expect["load_balance"])
+        assert float(rows["host_parallel_efficiency"][i]) == pytest.approx(
+            expect["parallel_efficiency"])
+    # exact two-rank check: LB = mean/max of per-rank active (useful +
+    # offload) time = mean(0.9, 0.5) / 0.9
+    assert float(rows["host_load_balance"][0]) == pytest.approx(0.7 / 0.9)
+
+
+def test_merge_step_series_device_columns_nanmean_and_ragged_ranks():
+    s0 = _rank_series([0.5, 0.5, 0.5], device_lb=[0.8, 0.6, 0.4])
+    s1 = _rank_series([0.5, 0.5], device_lb=[0.4, float("nan")])
+    job = merge_step_series({0: s0, 1: s1})
+    rows = job.rows()
+    assert list(rows["n_ranks"]) == [2.0, 2.0, 1.0]
+    lb = rows["device_load_balance"]
+    assert lb[0] == pytest.approx(0.6)   # mean(0.8, 0.4)
+    assert lb[1] == pytest.approx(0.6)   # NaN rank excluded from the mean
+    assert lb[2] == pytest.approx(0.4)   # only rank 0 has this step
+    # rank-1 host inputs exist only for the first two steps
+    assert rows["useful"] == pytest.approx([1.0, 1.0, 0.5])
+
+
+def test_spool_step_series_round_trip_and_merge(tmp_path):
+    spool = FileSpoolTransport(str(tmp_path))
+    s0 = _rank_series([0.7, 0.7])
+    s1 = _rank_series([0.3, 0.5])
+    spool.submit_steps(s0, rank=0)
+    spool.submit_steps(s1, rank=1)
+    assert spool.step_ranks() == [0, 1]
+    back = spool.collect_steps()
+    _assert_rows_equal(back[0].rows(), s0.rows())
+    _assert_rows_equal(back[1].rows(), s1.rows())
+    job = spool.merge_steps(name="job")
+    direct = merge_step_series({0: s0, 1: s1}, name="job")
+    _assert_rows_equal(job.rows(), direct.rows())
+
+
+def test_merge_step_series_empty_input_raises():
+    with pytest.raises(ValueError, match="empty"):
+        merge_step_series({})
+
+
+def test_base_fields_schema_stable():
+    # the spool payload's row dtype starts with the documented base fields
+    s = StepSeries(capacity=1)
+    names = list(s.dtype.names or ())
+    assert names[: len(BASE_FIELDS)] == [n for n, _ in BASE_FIELDS]

@@ -532,3 +532,95 @@ def test_overhead_json_roundtrip():
     rr = region_result_from_dict(d["regions"]["Global"])
     want = res[TalpMonitor.GLOBAL].host.talp_overhead
     assert rr.host.talp_overhead == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# watchdog publication + step-resolution trace tracks
+# ---------------------------------------------------------------------------
+def test_exporter_port_property():
+    clk, mon = _monitored_run()
+    exp = TelemetryExporter(mon)
+    assert exp.port is None            # not serving yet
+    port = exp.serve(port=0)           # ephemeral: OS picks a free port
+    try:
+        assert port > 0
+        assert exp.port == port
+        assert exp.serve() == port     # idempotent while running
+    finally:
+        exp.close()
+    assert exp.port is None
+
+
+def test_exporter_publishes_watchdog_state():
+    from repro.core.telemetry.watchdog import EfficiencyWatchdog
+
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    for i in range(20):
+        wd.observe(region="step", step=i, t=float(i),
+                   values={"host_parallel_efficiency": 0.9})
+    wd.observe(region="step", step=20, t=20.0,
+               values={"host_parallel_efficiency": 0.4})
+    assert len(wd.events) == 1
+
+    clk, mon = _monitored_run()
+    buf = io.StringIO()
+    exp = TelemetryExporter(mon, jsonl=buf, watchdog=wd)
+    exp.sample()
+    rec = json.loads(buf.getvalue().splitlines()[-1])
+    assert rec["watchdog"]["n_events"] == 1
+    assert rec["watchdog"]["firing"] == [
+        {"region": "step", "metric": "host_parallel_efficiency"}
+    ]
+    prom = exp.prometheus_text()
+    assert "# TYPE talp_watchdog_events_total counter" in prom
+    assert 'talp_watchdog_events_total{trace="run"} 1' in prom
+    assert ('talp_watchdog_firing{region="step",'
+            'metric="host_parallel_efficiency",trace="run"} 1') in prom
+    exp.close()
+
+
+def test_trace_step_counters_and_anomaly_markers():
+    """A step series switches the counter tracks to step resolution and
+    watchdog anomalies become instant markers — and the result still
+    passes the structural validator."""
+    from repro.core.telemetry.watchdog import synthetic_drift_scenario
+
+    sc = synthetic_drift_scenario(steps=40)
+    wd = sc["watchdog"]
+    series = sc["recorder"].series
+    assert wd.events and len(series) > 0
+    trace = tx.export_monitor(
+        sc["monitor"], result=sc["result"],
+        step_series=series, anomalies=wd.events,
+    )
+    stats = tx.validate_chrome_trace(trace)
+    # one instant marker per anomaly, on the anomalies process lane
+    assert stats["counts"]["i"] == len(wd.events)
+    # one counter event per (row, hierarchy): host + device per step row
+    assert stats["counts"]["C"] == 2 * len(series)
+    assert "talp anomalies" in trace
+    assert "talp:anomaly:device:load_balance" in trace
+    assert f"{tx.PID_ANOMALIES}" in trace
+
+
+def test_trace_step_counters_supersede_cadence_samples():
+    """With both polling samples and a step series, only the
+    step-resolution counters are emitted."""
+    from repro.core.telemetry.stepseries import StepSeriesRecorder
+
+    clk, mon = _monitored_run()
+    rec = StepSeriesRecorder(mon, capacity=16, regions=("step",))
+    samples = []
+    for _ in range(3):
+        with mon.region("step"):
+            clk.advance(0.1)
+        samples.append((clk.t, mon.sample_result()))
+    result = mon.finalize()
+    trace = tx.export_monitor(
+        mon, result=result, samples=samples, step_series=rec.series)
+    stats = tx.validate_chrome_trace(trace)
+    # 3 step rows x 2 hierarchy groups — exactly the step-resolution
+    # counters; the cadence track (3 samples x every region x hierarchy)
+    # would have added more
+    assert stats["counts"]["C"] == 2 * len(rec.series)
+    assert "talp:host:step" in trace

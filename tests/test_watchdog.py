@@ -1,0 +1,252 @@
+"""Efficiency watchdog: drift detection with hierarchy attribution,
+hysteresis, the anomaly-event schema, the JSONL stream, and the
+synthetic end-to-end scenario CI smokes."""
+
+import json
+import math
+
+import pytest
+
+from repro.core.telemetry import watchdog as wdm
+from repro.core.telemetry.watchdog import (
+    EfficiencyWatchdog,
+    load_anomaly_jsonl,
+    synthetic_drift_scenario,
+    validate_anomaly_events,
+)
+
+
+def _feed(wd, values_by_step, region="step"):
+    """Drive the watchdog with one metric row per step."""
+    out = []
+    for i, values in enumerate(values_by_step):
+        out.extend(wd.observe(region=region, step=i, t=float(i), values=values))
+    return out
+
+
+def _const_rows(col, value, n, **extra):
+    return [{col: value, **extra} for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# detection semantics on hand-built streams
+# ---------------------------------------------------------------------------
+def test_no_events_during_warmup():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    rows = _const_rows("host_parallel_efficiency", 0.9, 4)
+    rows.append({"host_parallel_efficiency": 0.1})   # huge jump, still warmup
+    assert _feed(wd, rows) == []
+    assert wd.events == []
+
+
+def test_persistent_shift_emits_exactly_one_event():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    rows = (_const_rows("host_parallel_efficiency", 0.9, 20)
+            + _const_rows("host_parallel_efficiency", 0.5, 20))
+    events = _feed(wd, rows)
+    assert len(events) == 1
+    ev = events[0]
+    assert ev.step == 20
+    assert ev.region == "step"
+    assert ev.hierarchy == "host"
+    assert ev.metric == "parallel_efficiency"
+    assert ev.direction == "drop"
+    assert ev.z < 0
+    assert wd.firing() == [
+        {"region": "step", "metric": "host_parallel_efficiency"}
+    ]
+    assert wd.summary()["n_events"] == 1
+
+
+def test_hysteresis_clears_then_refires():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    col = "host_parallel_efficiency"
+    rows = (_const_rows(col, 0.9, 20)     # baseline
+            + _const_rows(col, 0.5, 5)    # shift -> 1 event, baseline frozen
+            + _const_rows(col, 0.9, 10)   # recovery -> detector clears
+            + _const_rows(col, 0.5, 5))   # second shift -> second event
+    events = _feed(wd, rows)
+    assert len(events) == 2
+    assert events[0].step == 20
+    assert events[1].step >= 35
+    assert wd.firing()                     # second shift still firing at end
+
+
+def test_rise_direction_detected():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    rows = (_const_rows("host_parallel_efficiency", 0.5, 20)
+            + _const_rows("host_parallel_efficiency", 0.9, 5))
+    events = _feed(wd, rows)
+    assert len(events) == 1
+    assert events[0].direction == "rise" and events[0].z > 0
+
+
+def test_cusum_catches_slow_drift_below_z_threshold():
+    # each step moves by a fraction of sigma (z_fire would never trip on
+    # its own with a generous min_sigma), but the drift accumulates
+    wd = EfficiencyWatchdog(
+        metrics=("host_parallel_efficiency",),
+        min_sigma=0.05, z_fire=50.0, cusum_k=0.25, cusum_h=8.0,
+    )
+    rows = _const_rows("host_parallel_efficiency", 0.9, 20)
+    rows += [{"host_parallel_efficiency": 0.9 - 0.02 * i} for i in range(40)]
+    events = _feed(wd, rows)
+    assert len(events) >= 1
+    assert events[0].detector == "cusum"
+    assert events[0].direction == "drop"
+
+
+def test_nan_and_missing_values_skipped():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    rows = _const_rows("host_parallel_efficiency", 0.9, 20)
+    rows.append({"host_parallel_efficiency": math.nan})
+    rows.append({})                        # metric absent this step
+    rows += _const_rows("host_parallel_efficiency", 0.9, 5)
+    assert _feed(wd, rows) == []
+
+
+def test_unwatched_columns_get_baselines_but_never_fire():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    rows = [
+        {"host_parallel_efficiency": 0.9, "host_load_balance": 0.9}
+        for _ in range(20)
+    ]
+    rows += [
+        {"host_parallel_efficiency": 0.9, "host_load_balance": 0.2}
+        for _ in range(10)
+    ]
+    assert _feed(wd, rows) == []           # only the watched column fires
+    # but the unwatched column's baseline exists (it feeds attribution)
+    assert ("step", "host_load_balance") in wd._baselines
+
+
+def test_attribution_names_largest_multiplicative_mover():
+    # parallel_efficiency and load_balance drop together while the other
+    # multiplicative children stay flat: the attribution path must descend
+    # parallel_efficiency -> load_balance
+    wd = EfficiencyWatchdog(metrics=("device_parallel_efficiency",))
+    flat = {
+        "device_parallel_efficiency": 0.9,
+        "device_load_balance": 0.95,
+        "device_communication_efficiency": 0.98,
+        "device_orchestration_efficiency": 0.97,
+    }
+    degraded = dict(flat)
+    degraded["device_parallel_efficiency"] = 0.4
+    degraded["device_load_balance"] = 0.42
+    events = _feed(wd, [flat] * 20 + [degraded] * 5)
+    assert len(events) == 1
+    attr = events[0].attribution
+    assert attr and attr[0]["metric"] == "device_load_balance"
+    assert attr[0]["dlog"] < 0
+
+
+# ---------------------------------------------------------------------------
+# schema checker + JSONL stream
+# ---------------------------------------------------------------------------
+def _one_real_event():
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",))
+    events = _feed(wd, _const_rows("host_parallel_efficiency", 0.9, 20)
+                   + _const_rows("host_parallel_efficiency", 0.5, 2))
+    assert len(events) == 1
+    return events[0].as_dict()
+
+
+def test_validate_accepts_real_events():
+    assert validate_anomaly_events([_one_real_event()]) == 1
+    assert validate_anomaly_events([]) == 0
+
+
+@pytest.mark.parametrize(
+    "mutate, match",
+    [
+        (lambda d: d.update(kind="oops"), "kind"),
+        (lambda d: d.update(step="3"), "step"),
+        (lambda d: d.update(step=True), "step"),
+        (lambda d: d.update(region=""), "region"),
+        (lambda d: d.pop("metric"), "metric"),
+        (lambda d: d.update(z=float("inf")), "finite"),
+        (lambda d: d.update(baseline_std=-1.0), ">= 0"),
+        (lambda d: d.update(detector="psychic"), "detector"),
+        (lambda d: d.update(direction="sideways"), "direction"),
+        (lambda d: d.update(attribution="nope"), "attribution"),
+        (lambda d: d.update(attribution=[{"metric": ""}]), "attribution"),
+        (lambda d: d.update(
+            attribution=[{"metric": "x", "observed": "y",
+                          "baseline": 0.1, "dlog": 0.0}]), "attribution"),
+    ],
+)
+def test_validate_rejects_malformed(mutate, match):
+    ev = _one_real_event()
+    mutate(ev)
+    with pytest.raises(ValueError, match=match):
+        validate_anomaly_events([ev])
+
+
+def test_jsonl_stream_and_loader_round_trip(tmp_path):
+    path = str(tmp_path / "anomalies.jsonl")
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",), jsonl=path)
+    _feed(wd, _const_rows("host_parallel_efficiency", 0.9, 20)
+          + _const_rows("host_parallel_efficiency", 0.5, 2))
+    wd.close()
+    loaded = load_anomaly_jsonl(path)
+    assert loaded == [e.as_dict() for e in wd.events]
+    assert validate_anomaly_events(loaded) == len(wd.events) == 1
+
+
+def test_jsonl_filelike_sink_not_closed_by_watchdog(tmp_path):
+    import io
+
+    buf = io.StringIO()
+    wd = EfficiencyWatchdog(metrics=("host_parallel_efficiency",), jsonl=buf)
+    _feed(wd, _const_rows("host_parallel_efficiency", 0.9, 20)
+          + _const_rows("host_parallel_efficiency", 0.5, 2))
+    wd.close()                             # caller owns the file-like sink
+    lines = [json.loads(l) for l in buf.getvalue().splitlines()]
+    assert len(lines) == 1 and lines[0]["kind"] == "anomaly"
+
+
+# ---------------------------------------------------------------------------
+# the synthetic end-to-end scenario (what CI smokes)
+# ---------------------------------------------------------------------------
+def test_drift_scenario_detects_injection_with_attribution():
+    sc = synthetic_drift_scenario(steps=60)
+    wd = sc["watchdog"]
+    assert wd.events, "injected drift must be detected"
+    assert validate_anomaly_events([e.as_dict() for e in wd.events])
+    # every event is at/after the injection point, on a device metric
+    assert all(e.step >= sc["inject_step"] for e in wd.events)
+    assert all(e.hierarchy == "device" for e in wd.events)
+    assert all(e.direction == "drop" for e in wd.events)
+    metrics = {e.metric for e in wd.events}
+    assert "load_balance" in metrics
+    # the parallel_efficiency event is attributed to load_balance, not to
+    # the (unchanged) orchestration efficiency
+    pe = [e for e in wd.events if e.metric == "parallel_efficiency"]
+    assert pe and pe[0].attribution
+    assert pe[0].attribution[0]["metric"] == "device_load_balance"
+    # the series recorded every step (finalize adds the Global close row)
+    series = sc["recorder"].series
+    assert len(series.column("step", region="step")) == 60
+    assert sc["result"].regions["step"].elapsed > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_steady_scenario_stays_silent(seed):
+    sc = synthetic_drift_scenario(steps=60, inject=False, seed=seed)
+    assert sc["watchdog"].events == []
+    assert sc["inject_step"] is None
+
+
+def test_scenario_cli_expectations(tmp_path, capsys):
+    log = str(tmp_path / "anoms.jsonl")
+    assert wdm.main(["--steps", "60", "--anomaly-log", log,
+                     "--expect-anomaly"]) == 0
+    assert wdm.main(["--steps", "60", "--steady", "--expect-clean"]) == 0
+    assert wdm.main(["--validate", log]) == 0
+    assert wdm.main(["--steps", "60", "--steady", "--expect-anomaly"]) == 1
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"kind": "nonsense"}\n')
+    assert wdm.main(["--validate", str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "INVALID" in out
