@@ -42,6 +42,7 @@ from .states import (
     HostTimeline,
     Trace,
 )
+from .collect import FaultPlan, QuarantinedSpool, RankCoverage
 from .merge import (
     AllGatherTransport,
     FileSpoolTransport,
@@ -87,8 +88,11 @@ __all__ = [
     "TalpMonitor",
     "TalpResult",
     "AllGatherTransport",
+    "FaultPlan",
     "FileSpoolTransport",
     "InProcessGather",
+    "QuarantinedSpool",
+    "RankCoverage",
     "merge_region_results",
     "merge_results",
     "merge_samples",

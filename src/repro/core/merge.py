@@ -47,12 +47,24 @@ built from the merged result and any raw timeline attachments).
 from __future__ import annotations
 
 import io
+import itertools
 import json
 import os
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .collect import (
+    FaultPlan,
+    QuarantinedSpool,
+    RankCoverage,
+    SpoolPayloadError,
+    SpoolVersionError,
+    quarantine_spool,
+    read_spool_payload,
+    wait_for_ranks,
+)
 from .device_metrics import DeviceMetrics
 from .hierarchy import DEVICE, HOST, StateDurations
 from .host_metrics import HostMetrics
@@ -77,7 +89,39 @@ __all__ = [
     "AllGatherTransport",
     "merge_spool",
     "emit_job_report",
+    "RankCoverage",
+    "QuarantinedSpool",
+    "FaultPlan",
 ]
+
+#: Per-process monotonic counter for unique temp names: concurrent
+#: writers (threads, or two processes that were handed the same rank id)
+#: must never share a temp file, or one can publish the other's
+#: half-written bytes via ``os.replace``.
+_TMP_SEQ = itertools.count()
+
+
+def _tmp_name(path: str) -> str:
+    return f"{path}.{os.getpid()}.{next(_TMP_SEQ)}.tmp"
+
+
+def _fsync_write(path: str, data, mode: str) -> None:
+    """Write + flush + fsync a temp file, then atomically publish it.
+    Readers either see the old complete file or the new complete file —
+    never a partial one, even across a crash mid-write."""
+    tmp = _tmp_name(path)
+    try:
+        with open(tmp, mode) as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 #: Version stamp of the binary spool payload (NPZ columns + JSON header).
 SPOOL_BINARY_VERSION = 1
@@ -184,9 +228,20 @@ def merge_region_results(
 
 
 def merge_results(
-    results: Sequence[TalpResult], name: Optional[str] = None
+    results: Sequence[TalpResult],
+    name: Optional[str] = None,
+    coverage: Optional[RankCoverage] = None,
 ) -> TalpResult:
-    """Merge N per-rank :class:`TalpResult` payloads into the job result."""
+    """Merge N per-rank :class:`TalpResult` payloads into the job result.
+
+    ``coverage`` (a :class:`~repro.core.collect.RankCoverage`) annotates a
+    *partial* merge — which ranks were expected, merged, missing or
+    quarantined. It rides on the returned result's ``rank_coverage`` and
+    is carried through the report JSON round trip, the text report, the
+    telemetry exporter and the Chrome trace metadata; the merged metrics
+    themselves are computed from exactly the results given, identically
+    to a clean merge of those ranks.
+    """
     results = list(results)
     if not results:
         raise ValueError("merge_results: empty input")
@@ -201,7 +256,9 @@ def merge_results(
         )
         for rn in region_names
     }
-    return TalpResult(name=name or results[0].name, regions=merged)
+    return TalpResult(
+        name=name or results[0].name, regions=merged, rank_coverage=coverage
+    )
 
 
 def merge_samples(
@@ -368,12 +425,14 @@ def talp_result_from_json(text: str) -> TalpResult:
         # single-region payload: wrap it
         rr = region_result_from_dict(payload)
         return TalpResult(name=rr.name, regions={rr.name: rr})
+    cov = payload.get("rank_coverage")
     return TalpResult(
         name=payload.get("talp", "talp"),
         regions={
             rn: region_result_from_dict(rd, name=rn)
             for rn, rd in payload["regions"].items()
         },
+        rank_coverage=RankCoverage.from_dict(cov) if cov is not None else None,
     )
 
 
@@ -434,8 +493,8 @@ def result_from_spool_bytes(
         header = json.loads(bytes(npz["header"]).decode("utf-8"))
         version = header.get("version")
         if version is None or version > SPOOL_BINARY_VERSION:
-            raise ValueError(
-                f"unsupported binary spool payload version {version!r} "
+            raise SpoolVersionError(
+                f"binary spool payload version {version!r} "
                 f"(this reader supports <= {SPOOL_BINARY_VERSION})"
             )
         result = talp_result_from_json(json.dumps(header["result"]))
@@ -634,15 +693,18 @@ class FileSpoolTransport:
         path: str,
         timelines: Optional[Dict[int, DeviceTimeline]] = None,
     ) -> str:
+        # Atomic publish: a unique temp name per write (two writers
+        # handed the same rank id must not interleave inside one temp
+        # file), fsync before the rename (a crash mid-write must not
+        # leave a torn file under the published name), then os.replace —
+        # mergers only ever observe complete payloads.
         with _ovh.section("spool"):
-            tmp = path + ".tmp"
             if path.endswith(".npz"):
-                with open(tmp, "wb") as f:
-                    f.write(result_to_spool_bytes(result, timelines))
+                _fsync_write(path, result_to_spool_bytes(result, timelines),
+                             "wb")
             else:
-                with open(tmp, "w") as f:
-                    f.write(result_to_spool_json(result, timelines))
-            os.replace(tmp, path)  # atomic publish: mergers never see partials
+                _fsync_write(path, result_to_spool_json(result, timelines),
+                             "w")
             return path
 
     def submit(
@@ -708,6 +770,25 @@ class FileSpoolTransport:
             return bool(ranks)
         return len(ranks) >= self.world_size
 
+    def wait_for_ranks(
+        self,
+        max_wait: float,
+        world_size: Optional[int] = None,
+        poll: float = 0.05,
+        backoff: float = 2.0,
+        max_poll: float = 1.0,
+    ) -> List[int]:
+        """Deadline-based wait for straggler ranks: poll the spool with
+        exponential backoff until ``world_size`` (defaulting to the
+        transport's) rank files are present or ``max_wait`` seconds pass.
+        Returns whatever ranks arrived — never raises; pair with
+        ``merge(allow_missing=True)`` to proceed on a partial fleet."""
+        return wait_for_ranks(
+            self.spooled_ranks,
+            world_size if world_size is not None else self.world_size,
+            max_wait, poll=poll, backoff=backoff, max_poll=max_poll,
+        )
+
     def collect(self) -> List[TalpResult]:
         ranks = self.spooled_ranks()
         self._check_stale(ranks)
@@ -717,6 +798,52 @@ class FileSpoolTransport:
             if path is not None:
                 out.append(load_spool_payload(path)[0])
         return out
+
+    def collect_tolerant(
+        self,
+        expected: Optional[int] = None,
+        quarantine: bool = True,
+    ) -> Tuple[Dict[int, TalpResult], List[QuarantinedSpool]]:
+        """Fault-tolerant collection: read every rank payload that *can*
+        be read, quarantine (never crash on) the rest.
+
+        Unreadable payloads — truncated/zero-byte files, version
+        mismatches, mangled JSON — are classified with a reason string
+        and moved into ``<spool_dir>/quarantine/`` (with a
+        ``.reason.json`` sidecar) so a re-merge stays clean; files whose
+        rank id falls outside ``[0, expected)`` are quarantined as stale
+        rather than raising like the strict path. Returns
+        ``(results by rank, quarantined payload records)``.
+        """
+        world = expected if expected is not None else self.world_size
+        results: Dict[int, TalpResult] = {}
+        quarantined: List[QuarantinedSpool] = []
+
+        def _quarantine(path: str, reason: str, rank: Optional[int]) -> None:
+            dest = quarantine_spool(path, reason) if quarantine else None
+            quarantined.append(QuarantinedSpool(
+                path=path, reason=reason, rank=rank,
+                quarantined_to=(os.path.relpath(dest, self.spool_dir)
+                                if dest else None),
+            ))
+
+        for rank in self.spooled_ranks():
+            path = self._find(rank, self.PREFIX)
+            if path is None:
+                continue
+            if world is not None and rank >= world:
+                _quarantine(
+                    path,
+                    f"rank id {rank} outside world size {world} "
+                    "(stale file from a previous job?)",
+                    rank,
+                )
+                continue
+            try:
+                results[rank] = read_spool_payload(path)[0]
+            except SpoolPayloadError as e:
+                _quarantine(path, str(e), rank)
+        return results, quarantined
 
     def collect_timelines(self) -> Dict[int, Dict[int, DeviceTimeline]]:
         """Raw device-timeline attachments per spooled rank (empty dicts
@@ -730,11 +857,47 @@ class FileSpoolTransport:
                 out[rank] = load_spool_payload(path)[1]
         return out
 
-    def merge(self, name: Optional[str] = None) -> TalpResult:
-        results = self.collect()
-        if not results:
-            raise ValueError(f"no spooled results in {self.spool_dir}")
-        return merge_results(results, name=name)
+    def merge(
+        self,
+        name: Optional[str] = None,
+        allow_missing: bool = False,
+        max_wait: Optional[float] = None,
+        expected: Optional[int] = None,
+    ) -> TalpResult:
+        """Merge the spooled ranks into the job result.
+
+        Strict by default: any unreadable payload raises, exactly as
+        before. ``allow_missing=True`` switches to partial-rank mode:
+        unreadable payloads are quarantined (see
+        :meth:`collect_tolerant`), absent ranks are tolerated, and the
+        result carries a ``rank_coverage`` annotation naming the
+        expected/merged/missing/quarantined ranks. ``max_wait`` first
+        waits (with poll backoff) up to that many seconds for straggler
+        ranks to arrive; ``expected`` overrides the transport's
+        ``world_size`` as the expectation coverage is measured against.
+        """
+        world = expected if expected is not None else self.world_size
+        if max_wait is not None:
+            self.wait_for_ranks(max_wait, world_size=world)
+        if not allow_missing:
+            results = self.collect()
+            if not results:
+                raise ValueError(f"no spooled results in {self.spool_dir}")
+            return merge_results(results, name=name)
+        by_rank, quarantined = self.collect_tolerant(expected=world)
+        if not by_rank:
+            raise ValueError(
+                f"no readable spooled results in {self.spool_dir}"
+                + (f" ({len(quarantined)} payload(s) quarantined)"
+                   if quarantined else "")
+            )
+        coverage = RankCoverage.compute(
+            merged=list(by_rank), expected=world, quarantined=quarantined
+        )
+        return merge_results(
+            [by_rank[r] for r in sorted(by_rank)], name=name,
+            coverage=coverage,
+        )
 
     def collect_samples(self) -> List[TalpResult]:
         """Read every rank's latest mid-run snapshot currently present.
@@ -742,12 +905,18 @@ class FileSpoolTransport:
         Unlike :meth:`collect`, missing ranks are expected (a rank may not
         have published its first snapshot yet), so no staleness check —
         the job snapshot covers whichever ranks have reported so far.
+        Unreadable snapshots are skipped rather than quarantined: the
+        producer atomically overwrites its snapshot on the next sample,
+        so moving the file aside would race with a live writer.
         """
         out = []
         for rank in self.sampled_ranks():
             path = self._find(rank, self.SAMPLE_PREFIX)
             if path is not None:
-                out.append(load_spool_payload(path)[0])
+                try:
+                    out.append(read_spool_payload(path)[0])
+                except SpoolPayloadError:
+                    continue
         return out
 
     def merge_samples(self, name: Optional[str] = None) -> TalpResult:
@@ -769,10 +938,9 @@ class FileSpoolTransport:
         the schema, so readers need no hierarchy objects."""
         with _ovh.section("spool"):
             path = self._step_path(rank)
-            tmp = path + ".tmp"
-            with open(tmp, "wb") as f:
-                np.savez(f, **series.to_arrays())
-            os.replace(tmp, path)
+            buf = io.BytesIO()
+            np.savez(buf, **series.to_arrays())
+            _fsync_write(path, buf.getvalue(), "wb")
             return path
 
     def step_ranks(self) -> List[int]:
@@ -845,13 +1013,52 @@ class AllGatherTransport:
         )
         buf[8:8 + len(payload)] = np.frombuffer(payload, dtype=np.uint8)
         gathered = np.asarray(multihost_utils.process_allgather(buf))
-        results = []
-        for row in gathered.reshape(n_proc, self.max_bytes):
+        # Decode each rank's row defensively: a mangled or empty payload
+        # (a rank that died between initializing the fleet and filling
+        # its buffer, a producer-version skew) is quarantined with a
+        # reason instead of failing the whole job report; the survivors
+        # merge with a rank_coverage annotation.
+        results: List[Tuple[int, TalpResult]] = []
+        quarantined: List[QuarantinedSpool] = []
+        for i, row in enumerate(gathered.reshape(n_proc, self.max_bytes)):
             size = int.from_bytes(row[:8].tobytes(), "little")
-            results.append(
-                talp_result_from_json(row[8:8 + size].tobytes().decode("utf-8"))
+            try:
+                if size == 0:
+                    raise SpoolPayloadError("empty allgather payload")
+                if size > self.max_bytes - 8:
+                    raise SpoolPayloadError(
+                        "oversized allgather payload",
+                        f"claims {size}B in a {self.max_bytes}B buffer",
+                    )
+                results.append((i, talp_result_from_json(
+                    row[8:8 + size].tobytes().decode("utf-8")
+                )))
+            except SpoolPayloadError as e:
+                quarantined.append(QuarantinedSpool(
+                    path=f"allgather rank {i}", reason=str(e), rank=i
+                ))
+            except (UnicodeDecodeError, json.JSONDecodeError, KeyError,
+                    TypeError, ValueError) as e:
+                quarantined.append(QuarantinedSpool(
+                    path=f"allgather rank {i}",
+                    reason=f"mangled allgather payload "
+                           f"({type(e).__name__}: {e})",
+                    rank=i,
+                ))
+        if not results:
+            raise ValueError(
+                f"allgather produced no decodable payloads across "
+                f"{n_proc} process(es)"
             )
-        return merge_results(results, name=name)
+        coverage = None
+        if quarantined:
+            coverage = RankCoverage.compute(
+                merged=[i for i, _ in results], expected=n_proc,
+                quarantined=quarantined,
+            )
+        return merge_results(
+            [r for _, r in results], name=name, coverage=coverage
+        )
 
     def gather_sample(
         self, result: TalpResult, name: Optional[str] = None
@@ -864,10 +1071,21 @@ class AllGatherTransport:
         return self.gather(result, name=name)
 
 
-def merge_spool(spool_dir: str, name: Optional[str] = None) -> TalpResult:
+def merge_spool(
+    spool_dir: str,
+    name: Optional[str] = None,
+    allow_missing: bool = False,
+    max_wait: Optional[float] = None,
+    expected: Optional[int] = None,
+) -> TalpResult:
     """One-shot post-mortem merge of a rank spool directory (reads binary
-    and legacy JSON payloads alike)."""
-    return FileSpoolTransport(spool_dir).merge(name=name)
+    and legacy JSON payloads alike). ``allow_missing``/``max_wait``/
+    ``expected`` select the fault-tolerant partial-rank mode — see
+    :meth:`FileSpoolTransport.merge`."""
+    return FileSpoolTransport(spool_dir).merge(
+        name=name, allow_missing=allow_missing, max_wait=max_wait,
+        expected=expected,
+    )
 
 
 def emit_job_report(
@@ -878,31 +1096,52 @@ def emit_job_report(
     verbose: bool = True,
     payload: str = "binary",
     timelines: Optional[Dict[int, DeviceTimeline]] = None,
+    fault_plan: Optional[FaultPlan] = None,
 ) -> Optional[TalpResult]:
     """Launcher-side helper: spool this rank's report; once all ranks are
     in, merge and publish ``<spool_dir>/talp_job.json``.
 
     Multiple ranks may pass ``ready()`` near-simultaneously; the merge is
-    idempotent and the job file is published atomically (tmp +
+    idempotent and the job file is published atomically (unique tmp +
     ``os.replace``), so concurrent writers are safe — readers only ever
     see a complete report. Returns the job result on the rank(s) that
     merged, ``None`` elsewhere. The merged ``talp_job.json`` is always
     JSON (the job-level artifact stays human-readable); ``payload``
     selects the per-rank spool format.
+
+    ``fault_plan`` (a :class:`~repro.core.collect.FaultPlan` or spec) is
+    the drivers' ``--talp-fault-plan`` debug hook: it can drop this
+    rank's submit entirely, delay it, or mangle the published payload —
+    deterministic failure injection for exercising the tolerant-merge
+    path end to end. When a plan is active, any rank that does merge
+    merges tolerantly (``allow_missing=True``), since injected faults
+    make unreadable peers the *expected* outcome.
     """
     from .report import render_tables, to_json
 
     transport = FileSpoolTransport(spool_dir, world_size=world_size,
                                    payload=payload)
-    transport.submit(result, rank=rank, timelines=timelines)
+    if fault_plan is not None:
+        fault_plan = FaultPlan.from_spec(fault_plan)
+        if fault_plan.drops(rank):
+            if verbose:
+                print(f"[talp fault] rank {rank}: dropping spool submit")
+            return None
+        delay = fault_plan.delay_s(rank)
+        if delay:
+            if verbose:
+                print(f"[talp fault] rank {rank}: delaying submit {delay}s")
+            time.sleep(delay)
+    path = transport.submit(result, rank=rank, timelines=timelines)
+    if fault_plan is not None:
+        done = fault_plan.apply_to_file(path, rank)
+        if done and verbose:
+            print(f"[talp fault] rank {rank}: {done}")
     if not transport.ready():
         return None
-    job = transport.merge(name=result.name)
-    path = os.path.join(spool_dir, "talp_job.json")
-    tmp = f"{path}.tmp.{rank}"
-    with open(tmp, "w") as f:
-        f.write(to_json(job))
-    os.replace(tmp, path)
+    job = transport.merge(name=result.name,
+                          allow_missing=fault_plan is not None)
+    _fsync_write(os.path.join(spool_dir, "talp_job.json"), to_json(job), "w")
     if verbose:
         print(render_tables(job))
     return job
@@ -923,6 +1162,22 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                          "spool files; formats are auto-detected and mix "
                          "freely")
     ap.add_argument("--name", default=None, help="job name for the report")
+    ap.add_argument("--allow-missing-ranks", action="store_true",
+                    help="fault-tolerant partial merge: quarantine "
+                         "unreadable spool payloads (truncated/zero-byte/"
+                         "version-mismatched/mangled) instead of failing, "
+                         "tolerate absent ranks, and annotate the report "
+                         "with a rank_coverage node naming the expected/"
+                         "merged/missing/quarantined ranks")
+    ap.add_argument("--max-wait", type=float, default=None, metavar="SECONDS",
+                    help="wait up to this many seconds (polling with "
+                         "backoff) for straggler rank files to appear "
+                         "before merging; needs --expected-ranks to know "
+                         "when the spool is complete")
+    ap.add_argument("--expected-ranks", type=int, default=None, metavar="N",
+                    help="the job's world size: coverage is measured "
+                         "against ranks [0, N) (default: inferred from "
+                         "the highest rank id observed in the spool)")
     ap.add_argument("--json-out", default=None,
                     help="also write the merged report as JSON")
     ap.add_argument("--samples", action="store_true",
@@ -946,6 +1201,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
               file=sys.stderr)
         sys.exit(2)
     transport = FileSpoolTransport(args.spool_dir)
+    if args.max_wait is not None and not args.samples:
+        transport.wait_for_ranks(args.max_wait,
+                                 world_size=args.expected_ranks)
     pattern = (transport.SAMPLE_PREFIX if args.samples else transport.PREFIX)
     ranks = transport.sampled_ranks() if args.samples else transport.spooled_ranks()
     if not ranks:
@@ -959,11 +1217,21 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         if args.samples:
             job = transport.merge_samples(name=args.name)
         else:
-            job = transport.merge(name=args.name)
+            job = transport.merge(
+                name=args.name,
+                allow_missing=args.allow_missing_ranks,
+                expected=args.expected_ranks,
+            )
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         sys.exit(2)
     print(render_tables(job))
+    cov = job.rank_coverage
+    if cov is not None and not cov.complete:
+        print(f"warning: partial job report — {cov.summary()}; "
+              f"missing={cov.missing} "
+              f"quarantined={[q.rank for q in cov.quarantined]}",
+              file=sys.stderr)
     if args.json_out:
         with open(args.json_out, "w") as f:
             f.write(to_json(job))

@@ -128,9 +128,14 @@ def render_text(result: Result, title: Optional[str] = None) -> str:
 
 
 def render_tables(result: TalpResult) -> str:
-    """Render every region of a TalpResult."""
+    """Render every region of a TalpResult; a partial job report
+    (``rank_coverage`` set by a tolerant merge) gets a trailing coverage
+    block naming the missing/quarantined ranks."""
     parts = [render_text(r, title=f'{result.name} - region "{name}"')
              for name, r in sorted(result.regions.items())]
+    cov = getattr(result, "rank_coverage", None)
+    if cov is not None:
+        parts.append(cov.render_text())
     return "\n\n".join(parts)
 
 
@@ -146,12 +151,18 @@ def _result_dict(result: Result) -> Dict:
 
 
 def to_json(result: Union[Result, TalpResult], indent: int = 2) -> str:
-    """Machine-readable output (TALP's JSON path)."""
+    """Machine-readable output (TALP's JSON path). A tolerant merge's
+    ``rank_coverage`` annotation round-trips as a top-level node."""
     if isinstance(result, TalpResult):
         payload = {
             "talp": result.name,
             "regions": {n: _result_dict(r) for n, r in result.regions.items()},
         }
+        cov = result.rank_coverage
+        if cov is not None:
+            payload["rank_coverage"] = (
+                cov.as_dict() if hasattr(cov, "as_dict") else cov
+            )
     else:
         payload = _result_dict(result)
     return json.dumps(payload, indent=indent)

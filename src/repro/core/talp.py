@@ -134,6 +134,11 @@ class RegionResult:
 class TalpResult:
     name: str
     regions: Dict[str, RegionResult]
+    #: Partial-merge annotation (a :class:`repro.core.collect.RankCoverage`):
+    #: set by tolerant job-level merges to record which ranks were
+    #: expected/merged/missing/quarantined. ``None`` on per-rank results
+    #: and on strict (all-ranks) merges.
+    rank_coverage: Optional[object] = None
 
     def __getitem__(self, region: str) -> RegionResult:
         return self.regions[region]

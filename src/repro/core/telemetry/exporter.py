@@ -162,6 +162,13 @@ class TelemetryExporter:
             "name": snap.result.name,
             "regions": regions,
         }
+        cov = getattr(snap.result, "rank_coverage", None)
+        if cov is not None:
+            # job-level snapshots from a tolerant merge carry their
+            # partial-rank annotation into the stream
+            record["rank_coverage"] = (
+                cov.as_dict() if hasattr(cov, "as_dict") else cov
+            )
         if self.watchdog is not None:
             record["watchdog"] = self.watchdog.summary()
         return record

@@ -399,11 +399,15 @@ def _anomaly_lines(
     return lines
 
 
-def _assemble(lines: List[str], name: str) -> str:
+def _assemble(
+    lines: List[str], name: str, other: Optional[Dict] = None
+) -> str:
+    meta: Dict[str, object] = {"generator": "repro-talp", "trace": name}
+    if other:
+        meta.update(other)
     return (
         '{"traceEvents":[' + ",".join(lines) + '],"displayTimeUnit":"ms",'
-        '"otherData":{"generator":"repro-talp","trace":'
-        + json.dumps(name) + "}}"
+        '"otherData":' + json.dumps(meta, separators=(",", ":")) + "}"
     )
 
 
@@ -419,6 +423,7 @@ def _build(
     samples: Optional[Sequence[Tuple[float, TalpResult]]] = None,
     step_series=None,
     anomalies=None,
+    other: Optional[Dict] = None,
 ) -> str:
     lines: List[str] = [
         _meta_line("process_name", PID_HOST, "host ranks"),
@@ -448,7 +453,7 @@ def _build(
         lines.extend(_counter_lines(samples, t0))
     if anomalies:
         lines.extend(_anomaly_lines(anomalies, t0))
-    return _assemble(lines, name)
+    return _assemble(lines, name, other=other)
 
 
 def export_trace(
@@ -528,9 +533,15 @@ def export_result(
     use :func:`export_monitor` for exact region windows).
     """
     with _ovh.section("export"):
+        cov = getattr(result, "rank_coverage", None)
+        other = (
+            {"rank_coverage": cov.as_dict() if hasattr(cov, "as_dict")
+             else cov}
+            if cov is not None else None
+        )
         g = _pick_window_region(result)
         if g is None:
-            return _build(result.name, 0.0, {}, {}, {}, samples)
+            return _build(result.name, 0.0, {}, {}, {}, samples, other=other)
         device_lanes: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         if timelines:
             # Raw timelines live in the producing rank's clock domain;
@@ -551,7 +562,7 @@ def export_result(
         }
         return _build(
             result.name, 0.0, g.host_states, device_lanes,
-            region_windows, samples,
+            region_windows, samples, other=other,
         )
 
 

@@ -53,6 +53,7 @@ def serve(
     talp_step_series: int = 0,
     talp_watchdog: bool = False,
     talp_anomaly_log: str = None,
+    talp_fault_plan=None,
 ):
     """Serve a batch of requests. Multi-rank serving fleets: pass
     ``rank``/``world_size`` and a shared ``talp_spool`` dir to get one
@@ -69,7 +70,21 @@ def serve(
     resolution: each decode iteration runs in a nested ``decode_step``
     region whose close feeds the per-step ring and the anomaly
     watchdog. The decode-shape FLOP estimate feeds the measured
-    Computational Efficiency annotation."""
+    Computational Efficiency annotation. ``talp_fault_plan`` injects
+    deterministic collection faults for this rank (debug) — see
+    :class:`repro.core.collect.FaultPlan`."""
+    from ..core.collect import FaultPlan
+
+    fault_plan = (FaultPlan.from_spec(talp_fault_plan)
+                  if talp_fault_plan is not None else None)
+    clock = time.perf_counter
+    if fault_plan is not None:
+        skew = fault_plan.skew_s(rank)
+        if skew:
+            clock = lambda: time.perf_counter() + skew  # noqa: E731
+        if verbose and fault_plan.touches(rank):
+            print(f"[talp fault] rank {rank} plan: "
+                  f"{fault_plan.describe(rank)}")
     backend = RuntimeBackend()
     want_steps = bool(talp_step_series or talp_watchdog or talp_anomaly_log)
     flop_model = None
@@ -82,7 +97,7 @@ def serve(
             flops=0.0, hbm_bytes=0.0, collective_bytes=0.0,
             model_flops=model_flops(cfg, shape) / max(world_size, 1),
         )
-    mon = TalpMonitor("serve", rank=rank, backend=backend,
+    mon = TalpMonitor("serve", rank=rank, clock=clock, backend=backend,
                       overhead_report=True, flop_model=flop_model)
     step_recorder = step_watchdog = None
     if want_steps:
@@ -213,7 +228,8 @@ def serve(
         steps_transport.submit_steps(step_recorder.series, rank=rank)
     if talp_spool:
         emit_job_report(result, talp_spool, rank, world_size, verbose=verbose,
-                        payload=talp_spool_format, timelines=mon.devices)
+                        payload=talp_spool_format, timelines=mon.devices,
+                        fault_plan=fault_plan)
     if step_watchdog is not None:
         step_watchdog.close()
     return np.stack(tokens_out, axis=1), result
@@ -252,6 +268,11 @@ def main():
     ap.add_argument("--talp-anomaly-log", default=None,
                     help="stream watchdog anomaly events as JSONL "
                          "(implies --talp-watchdog)")
+    ap.add_argument("--talp-fault-plan", default=None, metavar="SPEC",
+                    help="deterministic collection-fault injection for "
+                         "this rank (debug): inline JSON or a JSON file "
+                         "with drop/truncate/corrupt/delay/clock_skew "
+                         "sections keyed by rank id")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     args = ap.parse_args()
@@ -267,7 +288,8 @@ def main():
                       talp_prometheus_port=args.talp_prometheus_port,
                       talp_step_series=args.talp_step_series,
                       talp_watchdog=args.talp_watchdog,
-                      talp_anomaly_log=args.talp_anomaly_log)
+                      talp_anomaly_log=args.talp_anomaly_log,
+                      talp_fault_plan=args.talp_fault_plan)
     dt = time.time() - t0
     n = tokens.size
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

@@ -70,6 +70,7 @@ def train(
     talp_step_series: int = 0,
     talp_watchdog: bool = False,
     talp_anomaly_log: str = None,
+    talp_fault_plan=None,
 ):
     """Train a (usually reduced) config; returns (state, history, talp).
 
@@ -98,7 +99,24 @@ def train(
     ``talp_anomaly_log`` streams its events as JSONL (either implies the
     step series). The step model's FLOP estimate feeds the measured
     Computational Efficiency annotation.
+
+    Debugging the fault-tolerant collection path: ``talp_fault_plan`` (a
+    :class:`~repro.core.collect.FaultPlan` spec — inline JSON or a file
+    path) deterministically injects collection failures for this rank:
+    drop/delay/corrupt the spool submit, or skew the monitor clock.
     """
+    from ..core.collect import FaultPlan
+
+    fault_plan = (FaultPlan.from_spec(talp_fault_plan)
+                  if talp_fault_plan is not None else None)
+    clock = time.perf_counter
+    if fault_plan is not None:
+        skew = fault_plan.skew_s(rank)
+        if skew:
+            clock = lambda: time.perf_counter() + skew  # noqa: E731
+        if verbose and fault_plan.touches(rank):
+            print(f"[talp fault] rank {rank} plan: "
+                  f"{fault_plan.describe(rank)}")
     opt_cfg = opt_cfg or AdamWConfig(warmup_steps=10, total_steps=steps)
     backend = RuntimeBackend()
     want_steps = bool(talp_step_series or talp_watchdog or talp_anomaly_log)
@@ -112,7 +130,7 @@ def train(
             flops=0.0, hbm_bytes=0.0, collective_bytes=0.0,
             model_flops=model_flops(cfg, shape) / max(world_size, 1),
         )
-    mon = TalpMonitor("train", rank=rank, backend=backend,
+    mon = TalpMonitor("train", rank=rank, clock=clock, backend=backend,
                       overhead_report=True, flop_model=flop_model)
     step_recorder = step_watchdog = None
     if want_steps:
@@ -269,7 +287,8 @@ def train(
         steps_transport.submit_steps(step_recorder.series, rank=rank)
     if talp_spool:
         emit_job_report(result, talp_spool, rank, world_size, verbose=verbose,
-                        payload=talp_spool_format, timelines=mon.devices)
+                        payload=talp_spool_format, timelines=mon.devices,
+                        fault_plan=fault_plan)
     if step_watchdog is not None:
         step_watchdog.close()
     return state, history, result
@@ -314,6 +333,11 @@ def main():
     ap.add_argument("--talp-anomaly-log", default=None,
                     help="stream watchdog anomaly events as JSONL to this "
                          "file (implies --talp-watchdog)")
+    ap.add_argument("--talp-fault-plan", default=None, metavar="SPEC",
+                    help="deterministic collection-fault injection for "
+                         "this rank (debug): inline JSON or a JSON file "
+                         "with drop/truncate/corrupt/delay/clock_skew "
+                         "sections keyed by rank id")
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--world-size", type=int, default=1)
     ap.add_argument("--history-json", default=None)
@@ -340,6 +364,7 @@ def main():
         talp_step_series=args.talp_step_series,
         talp_watchdog=args.talp_watchdog,
         talp_anomaly_log=args.talp_anomaly_log,
+        talp_fault_plan=args.talp_fault_plan,
     )
     if args.history_json:
         with open(args.history_json, "w") as f:

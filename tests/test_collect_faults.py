@@ -1,0 +1,511 @@
+"""Fault-tolerant collection (repro.core.collect + the tolerant merge
+paths in repro.core.merge): quarantine of corrupt spool payloads,
+partial-rank coverage accounting, straggler deadlines, atomic spool
+publication, and the deterministic FaultPlan injection layer."""
+
+import io
+import json
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import DeviceActivity
+from repro.core.collect import (
+    FaultPlan,
+    QuarantinedSpool,
+    RankCoverage,
+    SpoolPayloadError,
+    read_spool_payload,
+    wait_for_ranks,
+)
+from repro.core.merge import (
+    SPOOL_BINARY_VERSION,
+    FileSpoolTransport,
+    emit_job_report,
+    load_spool_payload,
+    merge_results,
+    merge_spool,
+    result_to_spool_bytes,
+    talp_result_from_json,
+)
+from repro.core.report import render_tables, to_json
+from repro.core.talp import TalpMonitor
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_rank_result(rank, useful=1.0, offload=0.5, mpi=0.25, kernel=0.4):
+    clk = FakeClock()
+    mon = TalpMonitor(f"rank{rank}", rank=rank, clock=clk)
+    with mon.region("step"):
+        clk.advance(useful)
+        if offload:
+            with mon.offload():
+                clk.advance(offload)
+        if mpi:
+            with mon.mpi():
+                clk.advance(mpi)
+    if kernel:
+        mon.add_device_record(0, DeviceActivity.KERNEL, 0.0, kernel)
+    return mon.finalize()
+
+
+def fill_spool(tmp_path, n_ranks, **kw):
+    sp = FileSpoolTransport(str(tmp_path))
+    for r in range(n_ranks):
+        sp.submit(make_rank_result(r, useful=1.0 + r, **kw), rank=r)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# corrupted-spool corpus: every corruption class quarantined with a reason
+# ---------------------------------------------------------------------------
+def _future_version_blob(result):
+    blob = result_to_spool_bytes(result)
+    with np.load(io.BytesIO(blob)) as z:
+        header = json.loads(bytes(z["header"].tobytes()).decode("utf-8"))
+        arrays = {k: z[k] for k in z.files if k != "header"}
+    header["version"] = SPOOL_BINARY_VERSION + 98
+    buf = io.BytesIO()
+    np.savez(buf, header=np.frombuffer(json.dumps(header).encode("utf-8"),
+                                       dtype=np.uint8), **arrays)
+    return buf.getvalue()
+
+
+def _mangled_header_blob(result):
+    """Valid NPZ container, unparseable JSON header member."""
+    buf = io.BytesIO()
+    np.savez(buf, header=np.frombuffer(b"{definitely not json",
+                                       dtype=np.uint8))
+    return buf.getvalue()
+
+
+def test_corrupt_spool_corpus_quarantined(tmp_path):
+    """Truncated NPZ, zero-byte file, future SPOOL_BINARY_VERSION,
+    mangled JSON header (binary) and mangled legacy JSON text are each
+    quarantined with a reason string; the surviving ranks still merge."""
+    sp = fill_spool(tmp_path, 6)
+
+    p0 = tmp_path / "talp_rank00000.npz"       # truncated mid-file
+    os.truncate(p0, p0.stat().st_size // 2)
+    (tmp_path / "talp_rank00001.npz").write_bytes(b"")   # zero-byte
+    (tmp_path / "talp_rank00002.npz").write_bytes(       # future version
+        _future_version_blob(make_rank_result(2)))
+    (tmp_path / "talp_rank00003.npz").write_bytes(       # mangled header
+        _mangled_header_blob(make_rank_result(3)))
+    os.unlink(tmp_path / "talp_rank00004.npz")           # legacy JSON,
+    (tmp_path / "talp_rank00004.json").write_text("{oops")  # mangled
+
+    job = sp.merge(name="job", allow_missing=True, expected=6)
+    cov = job.rank_coverage
+    assert cov.merged == [5]
+    assert cov.missing == []
+    assert sorted(q.rank for q in cov.quarantined) == [0, 1, 2, 3, 4]
+    reasons = {q.rank: q.reason for q in cov.quarantined}
+    assert "truncated" in reasons[0]
+    assert "zero-byte" in reasons[1]
+    assert "version" in reasons[2]
+    assert "mangled" in reasons[3] or "malformed" in reasons[3]
+    assert "JSON" in reasons[4] or "json" in reasons[4]
+    # every quarantined payload was moved aside with a reason sidecar
+    qdir = tmp_path / "quarantine"
+    for q in cov.quarantined:
+        moved = qdir / os.path.basename(q.path)
+        assert moved.exists()
+        sidecar = json.loads((str(moved) + ".reason.json")
+                             and open(str(moved) + ".reason.json").read())
+        assert sidecar["reason"] == q.reason
+    # the spool directory re-merges cleanly now (one rank left)
+    again = merge_spool(str(tmp_path), allow_missing=True, expected=6)
+    assert again.rank_coverage.merged == [5]
+    # survivor's metrics identical to a clean single-rank merge
+    clean = merge_results([make_rank_result(5, useful=6.0)], name="job")
+    assert (json.loads(to_json(job))["regions"]
+            == json.loads(to_json(clean))["regions"])
+
+
+def test_strict_merge_still_raises_on_corruption(tmp_path):
+    """Default (non-tolerant) behaviour is unchanged: a corrupt payload
+    fails the merge loudly."""
+    sp = fill_spool(tmp_path, 2)
+    os.truncate(tmp_path / "talp_rank00000.npz", 10)
+    with pytest.raises(Exception):
+        sp.merge()
+
+
+def test_read_spool_payload_reason_classes(tmp_path):
+    p = tmp_path / "talp_rank00000.npz"
+    p.write_bytes(b"")
+    with pytest.raises(SpoolPayloadError, match="zero-byte"):
+        read_spool_payload(str(p))
+    with pytest.raises(SpoolPayloadError, match="unreadable"):
+        read_spool_payload(str(tmp_path / "nonexistent.npz"))
+    p.write_bytes(b"PK\x03\x04 definitely truncated")
+    with pytest.raises(SpoolPayloadError):
+        read_spool_payload(str(p))
+    j = tmp_path / "talp_rank00001.json"
+    j.write_text("not json at all")
+    with pytest.raises(SpoolPayloadError, match="JSON"):
+        read_spool_payload(str(j))
+
+
+def test_tolerant_merge_quarantines_stale_ranks(tmp_path):
+    """Rank ids outside [0, world) are quarantined as stale instead of
+    raising like the strict path."""
+    sp = fill_spool(tmp_path, 2)
+    sp.submit(make_rank_result(7), rank=7)   # leftover from a bigger job
+    job = sp.merge(name="job", allow_missing=True, expected=2)
+    cov = job.rank_coverage
+    assert cov.merged == [0, 1] and cov.missing == []
+    assert [q.rank for q in cov.quarantined] == [7]
+    assert "stale" in cov.quarantined[0].reason
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: any non-empty subset of a rank set merges and validates,
+# and the coverage annotation exactly names the missing ranks
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    n_ranks=st.integers(min_value=1, max_value=6),
+    drop_mask=st.lists(st.booleans(), min_size=6, max_size=6),
+    useful=st.lists(
+        st.floats(min_value=0.01, max_value=10.0,
+                  allow_nan=False, allow_infinity=False),
+        min_size=6, max_size=6,
+    ),
+)
+def test_any_surviving_subset_merges_and_validates(
+    n_ranks, drop_mask, useful
+):
+    with tempfile.TemporaryDirectory() as tmp:
+        _check_subset_merge(tmp, n_ranks, drop_mask, useful)
+
+
+def _check_subset_merge(tmp, n_ranks, drop_mask, useful):
+    sp = FileSpoolTransport(tmp)
+    for r in range(n_ranks):
+        sp.submit(make_rank_result(r, useful=useful[r]), rank=r)
+    dropped = sorted(r for r in range(n_ranks) if drop_mask[r])
+    survivors = [r for r in range(n_ranks) if r not in dropped]
+    for r in dropped:
+        os.unlink(os.path.join(tmp, f"talp_rank{r:05d}.npz"))
+    if not survivors:
+        with pytest.raises(ValueError):
+            sp.merge(allow_missing=True, expected=n_ranks)
+        return
+    job = sp.merge(name="job", allow_missing=True, expected=n_ranks)
+    cov = job.rank_coverage
+    assert cov.expected == n_ranks
+    assert cov.merged == survivors
+    assert cov.missing == dropped           # exactly the missing ranks
+    assert not cov.quarantined
+    for rr in job.regions.values():
+        if rr.host is not None:
+            rr.host.validate()
+        if rr.device is not None:
+            rr.device.validate()
+    # the partial merge equals the clean merge of the survivors
+    clean = merge_results(
+        [make_rank_result(r, useful=useful[r]) for r in survivors],
+        name="job",
+    )
+    assert (json.loads(to_json(job))["regions"]
+            == json.loads(to_json(clean))["regions"])
+
+
+# ---------------------------------------------------------------------------
+# atomic publication: readers interleaved with writers never see partials
+# ---------------------------------------------------------------------------
+def test_submit_atomic_under_interleaved_reader(tmp_path):
+    """Regression for torn spool writes: a reader polling the published
+    path while two writer threads repeatedly submit the same rank must
+    only ever observe complete, parseable payloads."""
+    sp = FileSpoolTransport(str(tmp_path))
+    path = os.path.join(str(tmp_path), "talp_rank00000.npz")
+    results = [make_rank_result(0, useful=1.0 + i * 0.5) for i in range(2)]
+    stop = threading.Event()
+    errors = []
+    seen = [0]
+
+    def reader():
+        while not stop.is_set():
+            if os.path.exists(path):
+                try:
+                    load_spool_payload(path)
+                    seen[0] += 1
+                except Exception as e:  # torn read — the regression
+                    errors.append(repr(e))
+                    return
+
+    def writer(res):
+        for _ in range(40):
+            sp.submit(res, rank=0)
+
+    t_read = threading.Thread(target=reader)
+    t_read.start()
+    writers = [threading.Thread(target=writer, args=(r,)) for r in results]
+    for t in writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    t_read.join()
+    assert not errors, f"reader observed a torn payload: {errors[0]}"
+    assert seen[0] > 0, "reader never observed the payload at all"
+    # no temp-file litter, and the final payload is complete
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    load_spool_payload(path)
+
+
+def test_submit_steps_atomic_tmp_cleanup(tmp_path):
+    """submit_steps shares the unique-tmp + fsync + replace publication."""
+    from repro.core.telemetry.stepseries import StepSeriesRecorder
+
+    clk = FakeClock()
+    mon = TalpMonitor("r0", clock=clk)
+    rec = StepSeriesRecorder(mon, capacity=8, regions=("step",))
+    with mon.region("step"):
+        clk.advance(1.0)
+    rec.close()
+    sp = FileSpoolTransport(str(tmp_path))
+    sp.submit_steps(rec.series, rank=0)
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    assert 0 in sp.collect_steps()
+
+
+# ---------------------------------------------------------------------------
+# straggler deadline with backoff
+# ---------------------------------------------------------------------------
+def test_wait_for_ranks_deadline_and_backoff():
+    """The poll interval backs off exponentially (capped), the deadline
+    is honoured, and arrival short-circuits the wait."""
+    now = [0.0]
+    sleeps = []
+    ranks = []
+
+    def clock():
+        return now[0]
+
+    def sleep(dt):
+        sleeps.append(dt)
+        now[0] += dt
+
+    # never arrives: runs to the deadline with backing-off polls
+    got = wait_for_ranks(lambda: list(ranks), world_size=2, max_wait=3.0,
+                         poll=0.1, backoff=2.0, max_poll=1.0,
+                         clock=clock, sleep=sleep)
+    assert got == []
+    assert now[0] <= 3.0 + 1e-9
+    assert sleeps[0] == pytest.approx(0.1)
+    assert sleeps[1] == pytest.approx(0.2)
+    assert max(sleeps) <= 1.0 + 1e-9        # capped backoff
+
+    # arrival stops the wait early
+    now[0] = 0.0
+    sleeps.clear()
+
+    def sleep_and_arrive(dt):
+        sleeps.append(dt)
+        now[0] += dt
+        if len(sleeps) == 2:
+            ranks.extend([0, 1])
+
+    got = wait_for_ranks(lambda: list(ranks), world_size=2, max_wait=60.0,
+                         poll=0.1, clock=clock, sleep=sleep_and_arrive)
+    assert got == [0, 1]
+    assert len(sleeps) == 2
+    assert now[0] < 1.0
+
+
+def test_transport_wait_for_ranks(tmp_path):
+    """FileSpoolTransport.wait_for_ranks returns stragglers that land
+    mid-wait (a second thread playing the late rank)."""
+    sp = FileSpoolTransport(str(tmp_path), world_size=2)
+    sp.submit(make_rank_result(0), rank=0)
+
+    def late_rank():
+        sp.submit(make_rank_result(1), rank=1)
+
+    t = threading.Timer(0.15, late_rank)
+    t.start()
+    try:
+        got = sp.wait_for_ranks(max_wait=10.0)
+    finally:
+        t.join()
+    assert got == [0, 1]
+    # a deadline of zero returns immediately with whatever is present
+    assert sp.wait_for_ranks(max_wait=0.0) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# RankCoverage semantics
+# ---------------------------------------------------------------------------
+def test_rank_coverage_inference_and_round_trip():
+    q = QuarantinedSpool(path="talp_rank00003.npz", reason="zero-byte file",
+                         rank=3)
+    cov = RankCoverage.compute(merged=[0, 2], quarantined=[q])
+    assert cov.expected == 4                 # inferred: max observed id + 1
+    assert cov.merged == [0, 2]
+    assert cov.missing == [1]
+    assert not cov.complete
+    back = RankCoverage.from_dict(json.loads(json.dumps(cov.as_dict())))
+    assert back.as_dict() == cov.as_dict()
+    assert "3/" not in cov.summary() and cov.summary() == "2/4 rank(s) merged"
+
+    full = RankCoverage.compute(merged=[0, 1], expected=2)
+    assert full.complete
+    assert "all expected ranks merged" in full.render_text()
+
+
+def test_coverage_through_report_exporter_and_trace():
+    """The rank_coverage annotation survives the JSON round trip and
+    surfaces in the text report, the telemetry JSONL record and the
+    Chrome trace metadata."""
+    from repro.core.telemetry.exporter import TelemetryExporter
+    from repro.core.telemetry.traceexport import (
+        export_result, validate_chrome_trace,
+    )
+
+    cov = RankCoverage.compute(
+        merged=[0], expected=3,
+        quarantined=[QuarantinedSpool(path="talp_rank00001.npz",
+                                      reason="zero-byte file", rank=1)],
+    )
+    job = merge_results([make_rank_result(0)], name="job", coverage=cov)
+
+    # JSON round trip
+    back = talp_result_from_json(to_json(job))
+    assert back.rank_coverage.as_dict() == cov.as_dict()
+    # text report block
+    txt = render_tables(job)
+    assert "rank coverage: 1/3 rank(s) merged" in txt
+    assert "missing rank(s)    : 2" in txt
+    assert "zero-byte file" in txt
+    # Chrome trace metadata (and the trace still validates structurally)
+    trace = export_result(job)
+    validate_chrome_trace(trace)
+    other = json.loads(trace)["otherData"]
+    assert other["rank_coverage"] == cov.as_dict()
+    # telemetry JSONL record
+    clk = FakeClock()
+    mon = TalpMonitor("job", clock=clk)
+    exp = TelemetryExporter(mon)
+    snap = exp.sample()
+    snap.result.rank_coverage = cov
+    rec = exp.jsonl_record(snap)
+    assert rec["rank_coverage"] == cov.as_dict()
+    exp.close()
+
+
+def test_merge_without_losses_has_no_coverage_by_default(tmp_path):
+    """Strict merges stay byte-identical to the pre-fault-tolerance
+    output: no rank_coverage key appears."""
+    sp = fill_spool(tmp_path, 2)
+    job = sp.merge(name="job")
+    assert job.rank_coverage is None
+    assert "rank_coverage" not in json.loads(to_json(job))
+    # tolerant merge of a complete spool annotates complete coverage
+    job2 = sp.merge(name="job", allow_missing=True, expected=2)
+    assert job2.rank_coverage.complete
+    assert (json.loads(to_json(job2))["regions"]
+            == json.loads(to_json(job))["regions"])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+def test_fault_plan_parsing_forms(tmp_path):
+    spec = {"drop": [2], "truncate": {"1": 96},
+            "corrupt": {"0": {"offset": 4, "length": 2, "xor": 255}},
+            "delay": {"1": 0.25}, "clock_skew": {"0": 1.5}}
+    from_dict = FaultPlan.from_spec(spec)
+    from_json_str = FaultPlan.from_spec(json.dumps(spec))
+    path = tmp_path / "plan.json"
+    path.write_text(json.dumps(spec))
+    from_file = FaultPlan.from_spec(str(path))
+    from_at_file = FaultPlan.from_spec("@" + str(path))
+    for fp in (from_dict, from_json_str, from_file, from_at_file):
+        assert fp.drops(2) and not fp.drops(0)
+        assert fp.truncate == {1: 96}
+        assert fp.delay_s(1) == 0.25 and fp.delay_s(0) == 0.0
+        assert fp.skew_s(0) == 1.5
+        assert fp.touches(0) and not fp.touches(3)
+    assert FaultPlan.from_spec(from_dict) is from_dict
+    assert "drop submit" in from_dict.describe(2)
+    assert from_dict.describe(3) == "no faults"
+    with pytest.raises(ValueError, match="unknown fault plan"):
+        FaultPlan.from_spec({"explode": True})
+    with pytest.raises(ValueError, match="JSON"):
+        FaultPlan.from_spec("not a plan and not a file")
+
+
+def test_fault_plan_mutations(tmp_path):
+    fp = FaultPlan.from_spec({
+        "drop": [9], "truncate": {"1": 4},
+        "corrupt": {"2": {"offset": 1, "length": 2, "xor": 0xFF}},
+    })
+    assert fp.mutate_bytes(b"abcdefgh", 9) is None
+    assert fp.mutate_bytes(b"abcdefgh", 1) == b"abcd"
+    assert fp.mutate_bytes(b"abcdefgh", 0) == b"abcdefgh"
+    corrupted = fp.mutate_bytes(b"abcdefgh", 2)
+    assert corrupted[0:1] == b"a" and corrupted[3:] == b"defgh"
+    assert corrupted[1] == (ord("b") ^ 0xFF)
+
+    p = tmp_path / "payload.bin"
+    p.write_bytes(b"abcdefgh")
+    assert "truncated" in fp.apply_to_file(str(p), 1)
+    assert p.read_bytes() == b"abcd"
+    p.write_bytes(b"abcdefgh")
+    assert "corrupted" in fp.apply_to_file(str(p), 2)
+    assert p.read_bytes() == fp.mutate_bytes(b"abcdefgh", 2)
+    p.write_bytes(b"abcdefgh")
+    assert fp.apply_to_file(str(p), 0) is None
+    assert p.read_bytes() == b"abcdefgh"
+
+
+def test_emit_job_report_with_fault_plan(tmp_path):
+    """emit_job_report honours drop/corrupt injection and merges the
+    survivors tolerantly with coverage (the in-driver analogue of the
+    CI fault scenario)."""
+    plan = FaultPlan.from_spec({"drop": [2], "truncate": {"1": 64}})
+    out = []
+    for rank in range(3):
+        out.append(emit_job_report(
+            make_rank_result(rank), str(tmp_path), rank, world_size=3,
+            verbose=False, fault_plan=plan,
+        ))
+    # rank 2 dropped → the spool never completes → nobody merged
+    assert out == [None, None, None]
+    assert not (tmp_path / "talp_rank00002.npz").exists()
+    assert (tmp_path / "talp_rank00001.npz").stat().st_size == 64
+
+    # a 2-rank world with only a corruption *does* self-merge, tolerantly
+    tmp2 = tmp_path / "two"
+    plan2 = FaultPlan.from_spec({"truncate": {"0": 64}})
+    r0 = emit_job_report(make_rank_result(0), str(tmp2), 0, world_size=2,
+                         verbose=False, fault_plan=plan2)
+    r1 = emit_job_report(make_rank_result(1), str(tmp2), 1, world_size=2,
+                         verbose=False, fault_plan=plan2)
+    job = r1 if r1 is not None else r0
+    assert job is not None
+    cov = job.rank_coverage
+    assert cov.merged == [1]
+    assert [q.rank for q in cov.quarantined] == [0]
+    # the published job artifact carries the annotation too
+    disk = json.loads((tmp2 / "talp_job.json").read_text())
+    assert disk["rank_coverage"]["merged"] == [1]
